@@ -1,0 +1,19 @@
+"""Shared timing utilities for the benchmark harness."""
+from __future__ import annotations
+
+import time
+
+
+def time_us(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(*args)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def emit(name: str, us: float, derived: str = "") -> str:
+    line = f"{name},{us:.1f},{derived}"
+    print(line)
+    return line

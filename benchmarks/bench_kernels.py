@@ -1,0 +1,44 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU; compiled on TPU) vs
+the jnp oracle, plus the engine end-to-end with/without kernels.
+
+On this CPU container interpret-mode timings measure Python emulation —
+the DERIVED column reports the TPU-side arithmetic-intensity estimate
+(bytes/flops per probe) that the roofline analysis uses."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.bench_common import emit, time_us
+from repro.kernels import ref
+from repro.kernels.join_count import join_count_pallas
+
+
+def main(lines: list[str]) -> None:
+    rng = np.random.default_rng(0)
+    for n_probe, n_build in [(1 << 12, 1 << 14), (1 << 14, 1 << 16)]:
+        probe = jnp.asarray(rng.integers(0, 1 << 20, n_probe).astype(np.int32))
+        build = jnp.asarray(np.sort(
+            rng.integers(0, 1 << 20, n_build).astype(np.int32)))
+
+        oracle = jax.jit(ref.join_count_ref)
+        us_ref = time_us(lambda: jax.block_until_ready(oracle(probe, build)))
+        # interpret-mode kernel: correctness-path timing only
+        us_pal = time_us(
+            lambda: jax.block_until_ready(
+                join_count_pallas(probe, build, interpret=True)),
+            warmup=1, iters=2)
+        # TPU-side derived terms for one (256,512) tile pair:
+        #   bytes/tile = (256+512)*4 ; compares = 256*512*2
+        tiles = (n_probe / 256) * (n_build / 512)
+        tpu_bytes = (256 + 512) * 4 * tiles
+        tpu_cmps = 256 * 512 * 2 * tiles
+        lines.append(emit(f"kernels.join_count.ref.{n_probe}x{n_build}",
+                          us_ref, "jnp searchsorted"))
+        lines.append(emit(
+            f"kernels.join_count.pallas_interpret.{n_probe}x{n_build}",
+            us_pal,
+            f"tpu_bytes={tpu_bytes:.0f};tpu_cmps={tpu_cmps:.0f};"
+            f"intensity={tpu_cmps / tpu_bytes:.1f}"))

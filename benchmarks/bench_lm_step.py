@@ -1,0 +1,39 @@
+"""LM substrate microbenchmark: smoke-scale train/decode step wall time
+per architecture (CPU; real perf numbers come from the dry-run roofline)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.bench_common import emit, time_us
+from repro.configs import get_smoke_config, list_archs
+from repro.models.model import build_model
+from repro.train.train_step import TrainConfig, init_train_state, make_train_step
+
+
+def main(lines: list[str]) -> None:
+    rng = np.random.default_rng(0)
+    for arch in list_archs():
+        cfg = get_smoke_config(arch)
+        model = build_model(cfg)
+        tc = TrainConfig(remat="none")
+        state = init_train_state(model, tc, jax.random.key(0))
+        step = jax.jit(make_train_step(model, tc))
+        toks = jnp.asarray(rng.integers(8, cfg.vocab,
+                                        size=(2, 16)).astype(np.int32))
+        batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+        if cfg.mrope:
+            batch["positions"] = jnp.broadcast_to(
+                jnp.arange(16, dtype=jnp.int32)[None, :, None], (2, 16, 3))
+        if cfg.encoder is not None:
+            batch["enc_frames"] = jnp.asarray(
+                rng.normal(size=(2, 8, cfg.encoder.d_input)).astype(np.float32))
+
+        def run(state=state, batch=batch):
+            s, m = step(state, batch)
+            jax.block_until_ready(m["loss"])
+
+        us = time_us(run, warmup=2, iters=3)
+        lines.append(emit(f"lm_step.{arch}.smoke_train", us, "B=2,S=16"))

@@ -1,0 +1,36 @@
+"""View maintenance (quality-function m-term): incremental single-triple
+maintenance vs full recompute."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.bench_common import emit, time_us
+from repro.core.queries import full_projection
+from repro.rdf.generator import generate, lubm_workload
+from repro.views.maintenance import maintain
+from repro.views.materializer import materialize_view
+
+
+def main(lines: list[str]) -> None:
+    uni = generate(n_universities=2, seed=0)
+    workload = lubm_workload(uni.dictionary)
+    d = uni.dictionary
+    takes = d.lookup("ub:takesCourse")
+    students = uni.store.scan(None, d.lookup("ub:memberOf"), None)[:, 0]
+    courses = uni.store.scan(None, takes, None)[:, 2]
+    rng = np.random.default_rng(0)
+
+    for q in workload[:3]:
+        view_cq = full_projection(q.atoms, name=f"v_{q.name}")
+        extent = materialize_view(view_cq, uni.store).rows
+        triple = (int(rng.choice(students)), takes, int(rng.choice(courses)))
+
+        us_inc = time_us(
+            lambda: maintain(view_cq, extent, uni.store, triple), iters=5)
+        us_full = time_us(
+            lambda: materialize_view(view_cq, uni.store.insert(
+                np.array([triple], np.int32))), iters=5)
+        lines.append(emit(f"maintenance.{q.name}.incremental", us_inc,
+                          f"rows={len(extent)}"))
+        lines.append(emit(f"maintenance.{q.name}.recompute", us_full,
+                          f"speedup={us_full / max(us_inc, 1e-9):.1f}x"))

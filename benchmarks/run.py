@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  search          demo §4 / TR: strategies vs states explored vs quality
+  query_eval      demo finale: TT vs materialized views latency
+  reformulation   §3 Workload Processor: union sizes + completeness gain
+  maintenance     quality m-term: incremental vs recompute
+  kernels         Pallas join probe vs jnp oracle (+TPU derived terms)
+  lm_step         LM substrate smoke-step timings
+
+Prints ``name,us_per_call,derived`` CSV.  Roofline numbers for the full
+(arch x shape x mesh) grid come from the dry-run artifacts
+(artifacts/dryrun/*.json) — see EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_kernels, bench_lm_step, bench_maintenance,
+                            bench_query_eval, bench_reformulation,
+                            bench_search)
+
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    suites = {
+        "search": bench_search.main,
+        "query_eval": bench_query_eval.main,
+        "reformulation": bench_reformulation.main,
+        "maintenance": bench_maintenance.main,
+        "kernels": bench_kernels.main,
+        "lm_step": bench_lm_step.main,
+    }
+    lines: list[str] = ["name,us_per_call,derived"]
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if only and name != only:
+            continue
+        fn(lines)
+    print(f"# {len(lines) - 1} rows")
+
+
+if __name__ == "__main__":
+    main()

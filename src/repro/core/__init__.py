@@ -1,0 +1,38 @@
+"""RDFViewS core: the paper's contribution.
+
+Modules:
+  queries        — conjunctive-query model (CQ/Atom/Var/Const)
+  state          — search states S = (V, R) + initial_state
+  transitions    — selection cut / join cut / view fusion
+  quality        — the quality function epsilon(S)
+  search         — exhaustive + heuristic strategies
+  reformulation  — RDFS-aware query reformulation (CQ -> UCQ)
+  executor       — the Query Executor over materialized views
+  wizard         — end-to-end tune() pipeline
+
+Public names are re-exported lazily to avoid import cycles with
+repro.query (which uses the CQ model).
+"""
+_EXPORTS = {
+    "CQ": "repro.core.queries", "Atom": "repro.core.queries",
+    "Const": "repro.core.queries", "Var": "repro.core.queries",
+    "full_projection": "repro.core.queries",
+    "State": "repro.core.state", "View": "repro.core.state",
+    "initial_state": "repro.core.state",
+    "QualityWeights": "repro.core.quality", "quality": "repro.core.quality",
+    "SearchConfig": "repro.core.search", "SearchResult": "repro.core.search",
+    "search": "repro.core.search",
+    "WizardConfig": "repro.core.wizard", "WizardReport": "repro.core.wizard",
+    "tune": "repro.core.wizard",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name: str):
+    if name in _EXPORTS:
+        import importlib
+
+        mod = importlib.import_module(_EXPORTS[name])
+        return getattr(mod, name)
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")

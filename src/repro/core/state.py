@@ -1,0 +1,99 @@
+"""Search states: S = ⟨V, R⟩ — candidate views + workload rewritings.
+
+Invariant maintained by every transition: for each workload query q,
+`rewritings[q.name]` evaluates (over the extents of `views`) to exactly
+the answer of q over the triple table.  The property-based test suite
+checks this invariant on randomly generated transition paths.
+
+Positional contract: a `ViewRef(vid).schema` is positionally aligned with
+`views[vid].cq.head` (names may be plan-local renamings).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field, replace
+
+from repro.core.queries import CQ, Atom, Const, Var, full_projection
+from repro.query.plan import Plan, Project, ViewRef, referenced_views
+
+
+@dataclass(frozen=True)
+class View:
+    id: int
+    cq: CQ  # full projection: head == all body variables
+
+
+@dataclass(frozen=True)
+class State:
+    views: dict[int, View] = field(default_factory=dict)
+    rewritings: dict[str, Plan] = field(default_factory=dict)
+    queries: tuple[CQ, ...] = ()
+    next_view_id: int = 0
+    next_fresh: int = 0
+    # the transition path that produced this state (for the demo UI / logs)
+    path: tuple[str, ...] = ()
+
+    # ------------------------------------------------------------------
+    def key(self) -> frozenset:
+        """Memoization key: the canonical multiset of views."""
+        keys: list = []
+        for v in self.views.values():
+            keys.append(v.cq.canonical_key())
+        # multiset: count duplicates
+        out: dict = {}
+        for k in keys:
+            out[k] = out.get(k, 0) + 1
+        return frozenset(out.items())
+
+    def live_view_ids(self) -> set[int]:
+        used: set[int] = set()
+        for p in self.rewritings.values():
+            used |= referenced_views(p)
+        return used
+
+    def gc(self) -> "State":
+        """Drop views no rewriting references."""
+        live = self.live_view_ids()
+        if live == set(self.views):
+            return self
+        return replace(self, views={k: v for k, v in self.views.items() if k in live})
+
+    def with_path(self, step: str) -> "State":
+        return replace(self, path=self.path + (step,))
+
+    def fresh_var(self) -> tuple[Var, "State"]:
+        v = Var(f"_f{self.next_fresh}")
+        return v, replace(self, next_fresh=self.next_fresh + 1)
+
+    def summary(self) -> str:  # pragma: no cover - debug aid
+        lines = [f"State({len(self.views)} views)"]
+        for v in self.views.values():
+            lines.append(f"  v{v.id}: {len(v.cq.atoms)} atoms, head={len(v.cq.head)}")
+        return "\n".join(lines)
+
+
+def initial_state(queries: list[CQ]) -> State:
+    """The paper's initial state: materialize exactly the workload.
+
+    Best execution cost (each query is a view scan), worst storage /
+    maintenance.
+    """
+    views: dict[int, View] = {}
+    rewritings: dict[str, Plan] = {}
+    nid = 0
+    for q in queries:
+        assert q.name, "workload queries must be named"
+        assert q.name not in rewritings, f"duplicate query name {q.name}"
+        view_cq = full_projection(q.atoms, name=f"v_{q.name}")
+        v = View(id=nid, cq=view_cq)
+        views[nid] = v
+        head_names = tuple(h.name for h in view_cq.head)
+        ref = ViewRef(nid, head_names)
+        plan: Plan = ref
+        q_head = tuple(h.name for h in q.head)
+        if q_head != head_names:
+            plan = Project(ref, q_head)
+        rewritings[q.name] = plan
+        nid += 1
+    return State(views=views, rewritings=rewritings, queries=tuple(queries),
+                 next_view_id=nid)

@@ -1,0 +1,66 @@
+"""The storage tuning wizard: end-to-end pipeline of Figure 1.
+
+Workload Processor (RDFS reformulation) -> initial state -> States
+Navigator (search) -> View Materializer -> Query Executor.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.executor import QueryExecutor
+from repro.core.quality import QualityBreakdown, QualityWeights, quality
+from repro.core.reformulation import reformulate_workload
+from repro.core.search import SearchConfig, SearchResult, search
+from repro.core.state import State, initial_state
+from repro.rdf.schema import RDFSchema
+from repro.rdf.triples import TripleStore
+
+
+@dataclass
+class WizardConfig:
+    search: SearchConfig = field(default_factory=SearchConfig)
+    use_schema: bool = True
+    max_reformulations: int = 2048
+    use_pallas: bool = False
+
+
+@dataclass
+class WizardReport:
+    initial: State
+    initial_quality: QualityBreakdown
+    result: SearchResult
+    executor: QueryExecutor
+    groups: dict[str, list[str]]
+
+    def summary(self) -> str:
+        lines = [
+            f"initial: total={self.initial_quality.total:.1f} "
+            f"({len(self.initial.views)} views)",
+            f"search:  {self.result.summary()}",
+            "chosen views:",
+        ]
+        for vid, v in sorted(self.result.best.views.items()):
+            lines.append(
+                f"  v{vid}: {len(v.cq.atoms)} atoms / {len(v.cq.head)} cols "
+                f"(~{self.result.best_quality.per_view_rows.get(vid, 0):.0f} rows est)"
+            )
+        return "\n".join(lines)
+
+
+def tune(store: TripleStore, workload, schema: RDFSchema | None = None,
+         type_id: int | None = None, cfg: WizardConfig | None = None) -> WizardReport:
+    cfg = cfg or WizardConfig()
+    if cfg.use_schema and schema is not None:
+        assert type_id is not None, "type_id required for schema reformulation"
+        members, groups = reformulate_workload(
+            list(workload), schema, type_id, cfg.max_reformulations
+        )
+    else:
+        members, groups = list(workload), {q.name: [q.name] for q in workload}
+
+    init = initial_state(members)
+    init_q = quality(init, store.stats, cfg.search.weights)
+    result = search(init, store.stats, cfg.search)
+    executor = QueryExecutor(store, result.best, groups, use_pallas=cfg.use_pallas)
+    return WizardReport(initial=init, initial_quality=init_q, result=result,
+                        executor=executor, groups=groups)

@@ -1,0 +1,129 @@
+"""Logical-axis sharding: one rules table maps logical axes to mesh axes.
+
+MaxText-style: params and activations carry logical axis names
+('embed', 'heads', 'mlp', 'vocab', 'expert', 'batch', 'seq', ...); a
+RULES dict maps them onto physical mesh axes.  Changing distribution
+strategy = changing the table (this is the main §Perf knob).
+
+`axis_ctx` threads (mesh, rules) to the model code so layers can request
+activation constraints without importing distribution machinery.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.params import ParamSpec, is_spec
+
+# default: TP on the feature axes, DP (pod x data) on batch, params replicated
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "layer": None,
+    "seq_cache": None,
+}
+
+# FSDP: additionally shard the params' embed dim over ALL data-parallel
+# axes (ZeRO-3 style; GSPMD inserts the all-gathers) — needed for >=20B
+# configs.  'pod' is dropped automatically on the single-pod mesh.
+FSDP_RULES = {**DEFAULT_RULES, "embed": ("pod", "data")}
+
+# sequence parallelism for activations (long-context prefill)
+SEQ_RULES = {**DEFAULT_RULES, "seq": "data"}
+
+# decode: KV caches shard on their length (flash-decode style partial
+# softmax; GSPMD inserts the reductions) because kv_heads (often 8) do
+# not divide the model axis; recurrent-state features shard over model
+DECODE_RULES = {**DEFAULT_RULES, "seq_cache": "model", "kv_heads": None,
+                "state_feat": "model"}
+
+# long-context decode (batch=1): parallelism comes from the cache length,
+# not the batch — shard every KV cache over ALL mesh axes
+LONG_RULES = {**DEFAULT_RULES, "batch": None, "kv_heads": None,
+              "seq_cache": ("pod", "data", "model"), "state_feat": "model"}
+
+
+def spec_for(axes: tuple[str | None, ...], rules: dict, mesh: Mesh) -> P:
+    """PartitionSpec for logical axes; drops axes absent from the mesh and
+    resolves conflicts (a mesh axis may appear only once) left-to-right."""
+    used: set[str] = set()
+    parts: list = []
+    for ax in axes:
+        m = rules.get(ax) if ax is not None else None
+        if m is None:
+            parts.append(None)
+            continue
+        names = m if isinstance(m, tuple) else (m,)
+        names = tuple(n for n in names if n in mesh.axis_names and n not in used)
+        if not names:
+            parts.append(None)
+        elif len(names) == 1:
+            parts.append(names[0])
+            used.add(names[0])
+        else:
+            parts.append(names)
+            used.update(names)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def param_shardings(template, rules: dict, mesh: Mesh):
+    """NamedSharding pytree parallel to a ParamSpec template."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, spec_for(s.axes, rules, mesh)),
+        template, is_leaf=is_spec,
+    )
+
+
+# ----------------------------------------------------------------------
+# activation-constraint context
+# ----------------------------------------------------------------------
+_ACTIVE: list[tuple[Mesh, dict]] = []
+
+
+@contextlib.contextmanager
+def axis_ctx(mesh: Mesh, rules: dict):
+    _ACTIVE.append((mesh, rules))
+    try:
+        yield
+    finally:
+        _ACTIVE.pop()
+
+
+def shard_act(x: jax.Array, axes: tuple[str | None, ...]) -> jax.Array:
+    """Constrain an activation to the active rules (no-op outside ctx)."""
+    if not _ACTIVE:
+        return x
+    mesh, rules = _ACTIVE[-1]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec_for(axes, rules, mesh))
+    )
+
+
+def active_ctx() -> tuple[Mesh, dict] | None:
+    """The (mesh, rules) pair threaded by axis_ctx, if any."""
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def mesh_axes_of(logical: str) -> tuple[str, ...]:
+    """Physical mesh axes a logical axis maps to under the active rules."""
+    ctx = active_ctx()
+    if ctx is None:
+        return ()
+    mesh, rules = ctx
+    m = rules.get(logical)
+    if m is None:
+        return ()
+    names = m if isinstance(m, tuple) else (m,)
+    return tuple(n for n in names if n in mesh.axis_names)

@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: selection-cut compensation (predicate mask + block
+popcounts).
+
+A selection cut replaces a view constant with a variable; at query time
+the rewriting re-applies sigma_{col=c} over the (wider) view extent.
+That scan is memory-bound: rows stream HBM->VMEM once, each tile is
+evaluated against the (static) conjunction of equality predicates, and a
+per-block popcount is emitted so the host/XLA side can prefix-sum the
+block counts and gather the compacted survivors without re-reading the
+mask twice.
+
+  grid = (n_row_tiles,)
+  row tile (BR, W) VMEM -> mask (BR, 1) + one popcount per tile
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BR = 512
+
+
+def _make_kernel(conds: tuple[tuple[int, int], ...]):
+    def kernel(rows_ref, mask_ref, cnt_ref):
+        rows = rows_ref[...]                       # (BR, W)
+        mask = rows[:, 0:1] >= 0                   # valid rows only
+        for col, val in conds:
+            mask = mask & (rows[:, col:col + 1] == jnp.int32(val))
+        mask_ref[...] = mask.astype(jnp.int32)
+        cnt_ref[...] = jnp.sum(mask.astype(jnp.int32), keepdims=True).reshape(1, 1)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("conds", "br", "interpret"))
+def filter_mask_pallas(rows: jax.Array, conds: tuple[tuple[int, int], ...],
+                       br: int = DEFAULT_BR, interpret: bool = True
+                       ) -> tuple[jax.Array, jax.Array]:
+    """(mask, block_counts) for a conjunction of equality predicates.
+
+    rows: (N, W) int32 relation buffer (invalid rows have id -1 in col 0)
+    conds: static ((col, value), ...) conjunction
+    """
+    N, W = rows.shape
+    Np = -(-N // br) * br
+    rows_p = jnp.full((Np, W), -1, dtype=jnp.int32).at[:N].set(rows)
+    grid = (Np // br,)
+    mask, counts = pl.pallas_call(
+        _make_kernel(conds),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, W), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np, 1), jnp.int32),
+            jax.ShapeDtypeStruct((Np // br, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(rows_p)
+    return mask[:N, 0], counts[:, 0]

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: flash attention forward (online softmax).
+
+The §Perf cell-B analysis shows the remaining memory term of 32k-token
+prefill is the HBM-charged score-tile passes of the XLA-loop chunked
+attention.  This kernel is the VMEM-resident version: one (Cq x Ck) f32
+score tile lives in VMEM per grid step; HBM traffic is exactly
+q + k + v + o (+ the tiny m/l accumulators).
+
+  grid = (B*H, nq, nk)        # nk minor => sequential accumulation
+  q tile (Cq, hd) x k/v tiles (Ck, hd) per (batch*head)
+  GQA: head h reads kv-head h // (H // Hkv) via the k/v index maps.
+
+Accumulators (o, m, l) are output refs indexed by (bh, i): Pallas keeps
+them resident across the nk loop; the last step normalizes o by l.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+            scale: float, cq: int, ck: int, nk: int, window: int):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...].astype(jnp.float32)            # (Cq, hd)
+    k = k_ref[...].astype(jnp.float32)            # (Ck, hd)
+    v = v_ref[...].astype(jnp.float32)            # (Ck, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (Cq,Ck)
+
+    qpos = i * cq + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 0)
+    kpos = j * ck + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 1)
+    mask = kpos <= qpos
+    if window > 0:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # (Cq, 1)
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                         # (Cq, Ck)
+    alpha = jnp.exp(m_prev - m_new)                # (Cq, 1)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    o_new = o_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))            # (Cq, hd)
+
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        o_ref[...] = o_new / jnp.maximum(l_new, 1e-30)
+
+    @pl.when(j != nk - 1)
+    def _store():
+        o_ref[...] = o_new
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "cq", "ck", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           window: int = 0, cq: int = 128, ck: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """Causal (optionally sliding-window) GQA flash attention.
+
+    q: (B,S,H,hd); k,v: (B,S,Hkv,hd) -> (B,S,H,hd).  S % cq == S % ck == 0.
+    """
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    assert S % cq == 0 and S % ck == 0, (S, cq, ck)
+    nq, nk = S // cq, S // ck
+    scale = 1.0 / (hd ** 0.5)
+
+    # (B*H, S, hd) layout; kv stays at (B*Hkv, S, hd)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, hd)
+
+    def kv_index(bh, i, j):
+        return ((bh // H) * Hkv + (bh % H) // G, j, 0)
+
+    out, _, _ = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, cq=cq, ck=ck, nk=nk,
+                          window=window),
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((None, cq, hd), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((None, ck, hd), kv_index),
+            pl.BlockSpec((None, ck, hd), kv_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, cq, hd), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((None, cq, 1), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((None, cq, 1), lambda bh, i, j: (bh, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, S, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, S, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, S, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3).astype(q.dtype)

@@ -1,0 +1,34 @@
+"""Jit'd wrappers the query engine calls.
+
+`interpret` defaults to True off-TPU (this container validates kernels in
+interpret mode); on a real TPU backend the compiled kernels run.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.filter_compact import filter_mask_pallas
+from repro.kernels.flash_attn import flash_attention_pallas
+from repro.kernels.join_count import join_count_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def join_count(probe: jax.Array, build_sorted: jax.Array
+               ) -> tuple[jax.Array, jax.Array]:
+    """(lo, count) per probe key — Pallas probe phase of the sorted join."""
+    return join_count_pallas(probe, build_sorted, interpret=_interpret())
+
+
+def filter_mask(rows: jax.Array, conds: tuple[tuple[int, int], ...]
+                ) -> tuple[jax.Array, jax.Array]:
+    """(mask, block_counts) for a static conjunction of equalities."""
+    return filter_mask_pallas(rows, conds, interpret=_interpret())
+
+
+def flash_attention(q, k, v, window: int = 0):
+    """VMEM-resident flash attention forward (GQA, causal/sliding)."""
+    return flash_attention_pallas(q, k, v, window=window,
+                                  interpret=_interpret())

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def join_count_ref(probe: jax.Array, build_sorted: jax.Array
+                   ) -> tuple[jax.Array, jax.Array]:
+    """lo = #{s < l}, count = #{s == l} via binary search."""
+    lo = jnp.searchsorted(build_sorted, probe, side="left").astype(jnp.int32)
+    hi = jnp.searchsorted(build_sorted, probe, side="right").astype(jnp.int32)
+    return lo, hi - lo
+
+
+def filter_mask_ref(rows: jax.Array, conds: tuple[tuple[int, int], ...],
+                    br: int) -> tuple[jax.Array, jax.Array]:
+    """mask + per-block popcounts (block size br, zero-padded tail)."""
+    n = rows.shape[0]
+    mask = rows[:, 0] >= 0
+    for col, val in conds:
+        mask = mask & (rows[:, col] == jnp.int32(val))
+    mask = mask.astype(jnp.int32)
+    npad = -(-n // br) * br
+    padded = jnp.zeros((npad,), jnp.int32).at[:n].set(mask)
+    counts = padded.reshape(-1, br).sum(axis=1).astype(jnp.int32)
+    return mask, counts
+
+
+def flash_attention_ref(q, k, v, window: int = 0):
+    """Dense causal GQA attention oracle. q:(B,S,H,hd); k,v:(B,S,Hkv,hd)."""
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, S, Hkv, G, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s_ = jnp.einsum("bskgh,btkh->bkgst", qg, kf) / (hd ** 0.5)
+    i = jax.lax.broadcasted_iota(jnp.int32, (S, S), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (S, S), 1)
+    mask = j <= i
+    if window > 0:
+        mask = mask & (j > i - window)
+    s_ = jnp.where(mask[None, None, None], s_, -1e30)
+    p = jax.nn.softmax(s_, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)

@@ -1,0 +1,271 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes, capture memory/cost analysis + roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun                 # everything
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-32b \
+        --shape train_4k --multi-pod                              # one cell
+    PYTHONPATH=src python -m repro.launch.dryrun --paper          # query_step
+
+Results are cached incrementally in artifacts/dryrun/<cell>.json; use
+--force to re-run.  The FIRST import above pins 512 host devices — this
+module must be the process entry point (never import it from tests).
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, applicable, make_cell
+from repro.configs import get_config, list_archs
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+
+def cell_path(arch: str, shape: str, multi_pod: bool, tag: str = "") -> str:
+    pod = "pod2" if multi_pod else "pod1"
+    suffix = f".{tag}" if tag else ""
+    return os.path.join(ART_DIR, f"{arch}__{shape}__{pod}{suffix}.json")
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, tag: str = "",
+             rules: dict | None = None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    ok, why = applicable(arch, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape, "chips": chips,
+                "multi_pod": multi_pod, "status": "skipped", "reason": why}
+    t0 = time.monotonic()
+    cell = make_cell(arch, shape, mesh, rules=rules)
+    jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                     donate_argnums=cell.donate)
+    lowered = jitted.lower(*cell.args)
+    t_lower = time.monotonic() - t0
+    t0 = time.monotonic()
+    compiled = lowered.compile()
+    t_compile = time.monotonic() - t0
+
+    mem = compiled.memory_analysis()
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    mf = RL.model_flops_for(cfg, spec["kind"], spec["batch"], spec["seq"])
+    roof = RL.extract(compiled, None, chips, mf)
+
+    result = {
+        "arch": arch, "shape": shape, "chips": chips,
+        "multi_pod": multi_pod, "status": "ok",
+        "kind": spec["kind"], "seq": spec["seq"], "batch": spec["batch"],
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+        },
+        "roofline": roof.as_dict(),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    return result
+
+
+# ----------------------------------------------------------------------
+# the paper's own workload: distributed query_step
+# ----------------------------------------------------------------------
+def run_paper_cell(multi_pod: bool, n_triples: int = 1_000_000_000,
+                   copartition: bool = True) -> dict:
+    """Lower the distributed evaluation of a 3-atom star-join rewriting
+    over a `n_triples` TT sharded across the mesh's data axes."""
+    from repro.core.queries import Atom, Const, Var
+    from repro.query import distributed as D
+    from repro.query.cost import RelInfo
+    from repro.query.plan import EquiJoin, Project, TTScan
+    from repro.rdf.triples import Statistics
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    # partition axes for the query engine; REPRO_QUERY_AXES=data,model
+    # flattens the whole pod into the hash-partition space (§Perf C1)
+    axes_env = os.environ.get("REPRO_QUERY_AXES", "data")
+    axis = tuple(axes_env.split(",")) if "," in axes_env else axes_env
+    names = axis if isinstance(axis, tuple) else (axis,)
+    ndev = int(np.prod([mesh.shape[a] for a in names]))
+
+    n_preds = 64
+    per_pred = n_triples / n_preds
+    stats = Statistics(
+        n_triples=n_triples, n_ids=n_triples // 4,
+        pred_count={p: int(per_pred) for p in range(n_preds)},
+        pred_distinct_s={p: int(per_pred / 8) for p in range(n_preds)},
+        pred_distinct_o={p: int(per_pred / 16) for p in range(n_preds)},
+        distinct_s=n_triples // 8, distinct_o=n_triples // 16,
+        distinct_p=n_preds, pred_obj_hist={},
+    )
+    x, y, z, w = Var("x"), Var("y"), Var("z"), Var("w")
+    plan = Project(
+        EquiJoin(
+            EquiJoin(TTScan(Atom(x, Const(1), y)), TTScan(Atom(x, Const(2), z)),
+                     (("x", "x"),)),
+            TTScan(Atom(z, Const(3), w)),
+            (("z", "z"),),
+        ),
+        ("x", "w"),
+    )
+    t0 = time.monotonic()
+    fn = D.build_distributed_executor(plan, stats, {}, mesh, axis=axis,
+                                      safety=2.0)
+    # TT shards: per-device rows padded to pow2
+    from repro.query.cost import capacity_for
+
+    # multiple-of-1024 padding instead of pow2: pow2 wastes up to 2x on
+    # the TT shards, and every column pass pays for the padding (§Perf C4)
+    per_dev = int(-(-n_triples / ndev * 1.05 // 1024) * 1024)
+    from repro.query import engine as QE
+
+    tt = {k: jax.ShapeDtypeStruct((ndev * per_dev, 3), jnp.int32)
+          for k in QE.INDEX_NAMES}
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    tt_sh = {k: NamedSharding(mesh, P(axis)) for k in tt}
+    jitted = jax.jit(fn, in_shardings=(tt_sh, {}))
+    lowered = jitted.lower(tt, {})
+    t_lower = time.monotonic() - t0
+    t0 = time.monotonic()
+    compiled = lowered.compile()
+    t_compile = time.monotonic() - t0
+    mem = compiled.memory_analysis()
+    roof = RL.extract(compiled, None, chips, model_flops=0.0)
+    return {
+        "arch": "rdfviews-query-step", "shape": f"star3_{n_triples}",
+        "chips": chips, "multi_pod": multi_pod, "status": "ok",
+        "kind": "query", "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+        },
+        "roofline": roof.as_dict(),
+    }
+
+
+def run_audit(arch: str, shape: str, multi_pod: bool, tag: str = "") -> None:
+    """Attach trip-count-corrected roofline terms to a cached artifact."""
+    from repro.launch.flops_audit import corrected_costs
+
+    path = cell_path(arch, shape, multi_pod, tag)
+    if not os.path.exists(path):
+        print(f"no artifact for {arch} {shape}; run the dry-run first")
+        return
+    with open(path) as f:
+        res = json.load(f)
+    if res.get("status") != "ok":
+        return
+    if "roofline_corrected" in res:
+        print(f"audited {arch} {shape} pod={'2' if multi_pod else '1'}")
+        return
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    c = corrected_costs(arch, shape, mesh)
+    roof = RL.Roofline(flops=c["flops"], hbm_bytes=c["bytes"],
+                       collective_bytes=c["coll"],
+                       chips=res["chips"],
+                       model_flops=res["roofline"]["model_flops"])
+    res["roofline_corrected"] = roof.as_dict()
+    res["audit_detail"] = {k: c[k] for k in ("stem", "per_group",
+                                             "loop_correction")}
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    r = res["roofline_corrected"]
+    print(f"AUDIT {arch} {shape} pod={'2' if multi_pod else '1'}: "
+          f"bottleneck={r['bottleneck']} frac={r['roofline_fraction']:.3f} "
+          f"useful={r['useful_flops_ratio']:.2f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one architecture id")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--paper", action="store_true",
+                    help="lower the paper's distributed query_step")
+    ap.add_argument("--audit", action="store_true",
+                    help="add trip-count-corrected roofline to artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="", help="result filename suffix")
+    args = ap.parse_args()
+
+    os.makedirs(ART_DIR, exist_ok=True)
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    if args.audit:
+        for mp in meshes:
+            for arch in archs:
+                for shape in shapes:
+                    try:
+                        run_audit(arch, shape, mp, args.tag)
+                    except Exception as e:  # noqa: BLE001
+                        print(f"AUDIT-FAIL {arch} {shape}: {e}")
+                        traceback.print_exc()
+        return
+
+    if args.paper:
+        for mp in meshes:
+            path = cell_path("rdfviews-query-step", "star3", mp, args.tag)
+            if os.path.exists(path) and not args.force:
+                print(f"cached {path}")
+                continue
+            res = run_paper_cell(mp)
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            print(f"PAPER pod={'2' if mp else '1'} "
+                  f"compile={res['compile_s']}s "
+                  f"bottleneck={res['roofline']['bottleneck']}")
+        return
+
+    failures = []
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                path = cell_path(arch, shape, mp, args.tag)
+                if os.path.exists(path) and not args.force:
+                    print(f"cached {arch} {shape} pod={'2' if mp else '1'}")
+                    continue
+                label = f"{arch} {shape} pod={'2' if mp else '1'}"
+                try:
+                    res = run_cell(arch, shape, mp)
+                except Exception as e:  # noqa: BLE001 - report and continue
+                    failures.append(label)
+                    print(f"FAIL  {label}: {e}")
+                    traceback.print_exc()
+                    continue
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                if res["status"] == "skipped":
+                    print(f"SKIP  {label}: {res['reason'][:60]}")
+                else:
+                    r = res["roofline"]
+                    print(f"OK    {label}: compile={res['compile_s']}s "
+                          f"bottleneck={r['bottleneck']} "
+                          f"frac={r['roofline_fraction']:.3f}")
+    if failures:
+        print(f"\n{len(failures)} FAILURES: {failures}")
+        raise SystemExit(1)
+    print("\nall cells complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""Trip-count-corrected cost analysis.
+
+XLA's `cost_analysis()` counts a while-loop body ONCE, so a scanned
+N-group model under-reports flops/bytes/collective-bytes by ~N.  We
+recover honest totals by a variant decomposition — lower the same cell
+with 0 groups (stem) and 1 group (stem+body):
+
+    corrected = stem + G * (body1 - stem)  [+ E * (enc1 - stem)]
+
+which is exact for homogeneous scanned groups (cross-group fusion is
+impossible across a loop boundary).  Two in-body sequential loops are
+additionally corrected analytically, since even body1 counts them once:
+
+  * RWKV6's WKV time scan (seq steps)     — ~7*nh*hd^2 flops/token/blk
+  * Mamba2's inter-chunk state scan       — 3*nh*N*P flops/chunk/blk
+
+The audit runs per (arch x shape x mesh) and is attached to the dry-run
+artifact as `roofline_corrected`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import replace
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch import roofline as RL
+from repro.launch.shapes import SHAPES, env_cfg, make_cell, rules_for
+from repro.models.ssm import mamba2_dims, rwkv6_dims
+
+
+def _variant(cfg, n_groups: int, enc_layers: int | None = None):
+    c = replace(cfg, n_layers=n_groups * len(cfg.block_pattern))
+    if cfg.encoder is not None:
+        e = enc_layers if enc_layers is not None else cfg.encoder.n_layers
+        c = replace(c, encoder=replace(cfg.encoder, n_layers=e))
+    return c
+
+
+def _measure(arch: str, shape: str, mesh, rules, cfg) -> dict:
+    cell = make_cell(arch, shape, mesh, rules=rules, cfg=cfg)
+    jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                     donate_argnums=cell.donate)
+    compiled = jitted.lower(*cell.args).compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    coll = RL.parse_collectives(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll": float(coll.total_bytes),
+        "coll_by_op": dict(coll.bytes_by_op),
+    }
+
+
+def _batch_shards(mesh, rules) -> int:
+    names = rules.get("batch") or ()
+    names = names if isinstance(names, tuple) else (names,)
+    n = 1
+    for a in names:
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return max(n, 1)
+
+
+def _loop_corrections(cfg, kind: str, batch: int, seq: int, mesh, rules
+                      ) -> tuple[float, float]:
+    """Per-device (flops, bytes) to add for in-body sequential loops."""
+    if kind == "decode":
+        return 0.0, 0.0  # one step: no time/chunk loops execute
+    b_loc = max(batch // _batch_shards(mesh, rules), 1)
+    mult = 4.0 if kind == "train" else 1.0  # fwd+bwd+remat recompute
+    flops = 0.0
+    bytes_ = 0.0
+    G = cfg.n_groups
+    if "rwkv6" in cfg.block_pattern:
+        nh, hd = rwkv6_dims(cfg)
+        n_blk = cfg.block_pattern.count("rwkv6") * G
+        steps = seq - 1  # body1 already counts one step
+        per_step_f = 7.0 * nh * hd * hd * b_loc
+        per_step_b = b_loc * (2 * nh * hd * hd * 4        # state rw (fp32)
+                              + 4 * nh * hd * 4)          # r,k,v,w reads
+        flops += n_blk * steps * per_step_f * mult
+        bytes_ += n_blk * steps * per_step_b * mult
+    if cfg.ssm is not None and any(
+            b in cfg.block_pattern for b in ("mamba2", "mamba2_shared")):
+        d_in, nh, _ = mamba2_dims(cfg)
+        N, P = cfg.ssm.state_dim, cfg.ssm.head_dim
+        n_blk = (cfg.block_pattern.count("mamba2")
+                 + cfg.block_pattern.count("mamba2_shared")) * G
+        nc = max(seq // cfg.ssm.chunk, 1) - 1
+        per_trip_f = 3.0 * nh * N * P * b_loc
+        per_trip_b = b_loc * 3 * nh * N * P * 4
+        flops += n_blk * nc * per_trip_f * mult
+        bytes_ += n_blk * nc * per_trip_b * mult
+    if cfg.attn_impl == "chunked":
+        # nested q/kv chunk scans: the (qi, kj) tile body is counted once;
+        # add the remaining nq*nk - 1 tile trips analytically.  The tile
+        # einsums are head-sharded over the 'heads' mesh axes, so the
+        # per-device tile touches H_loc (not H) heads.
+        n_attn = sum(1 for b in cfg.block_pattern if b in ("attn", "swa")) * G
+        if "mamba2_shared" in cfg.block_pattern:
+            n_attn += cfg.block_pattern.count("mamba2_shared") * G
+        C = cfg.attn_chunk
+        if n_attn and seq % C == 0:
+            h_axes = rules.get("heads")
+            h_axes = h_axes if isinstance(h_axes, tuple) else (h_axes,)
+            n_h = 1
+            for a in h_axes:
+                if a is not None and a in mesh.axis_names:
+                    n_h *= mesh.shape[a]
+            H_loc = max(-(-cfg.n_heads // n_h), 1)
+            kv_loc = max(-(-cfg.n_kv_heads // n_h), 1)
+            hd = cfg.hd
+            trips = (seq // C) ** 2 - 1
+            per_tile_f = b_loc * H_loc * C * C * (4.0 * hd + 8.0)
+            per_tile_b = b_loc * (
+                H_loc * C * C * 4 * 3               # score tile passes (f32)
+                + H_loc * C * hd * 4 * 2            # q tile + acc update
+                + 2 * kv_loc * C * hd * 4)          # k,v tiles
+            flops += n_attn * trips * per_tile_f * mult
+            bytes_ += n_attn * trips * per_tile_b * mult
+    return flops, bytes_
+
+
+def corrected_costs(arch: str, shape: str, mesh, rules=None) -> dict:
+    """Per-device corrected (flops, bytes, collective bytes) + detail."""
+    cfg = env_cfg(get_config(arch))
+    rules = rules or rules_for(arch, shape)
+    spec = SHAPES[shape]
+    G = cfg.n_groups
+    E = cfg.encoder.n_layers if cfg.encoder is not None else 0
+
+    stem = _measure(arch, shape, mesh, rules, _variant(cfg, 0, 0 if E else None))
+    body = _measure(arch, shape, mesh, rules, _variant(cfg, 1, 0 if E else None))
+    out = {}
+    for k in ("flops", "bytes", "coll"):
+        out[k] = stem[k] + G * (body[k] - stem[k])
+    if E:
+        enc = _measure(arch, shape, mesh, rules, _variant(cfg, 0, 1))
+        for k in ("flops", "bytes", "coll"):
+            out[k] += E * (enc[k] - stem[k])
+    lf, lb = _loop_corrections(cfg, spec["kind"], spec["batch"], spec["seq"],
+                               mesh, rules)
+    out["flops"] += lf
+    out["bytes"] += lb
+    out["loop_correction"] = {"flops": lf, "bytes": lb}
+    out["stem"] = {k: stem[k] for k in ("flops", "bytes", "coll")}
+    out["per_group"] = {k: body[k] - stem[k] for k in ("flops", "bytes", "coll")}
+    return out
+
+
+def corrected_roofline(arch: str, shape: str, mesh, rules=None) -> RL.Roofline:
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    chips = int(np.prod(list(mesh.shape.values())))
+    c = corrected_costs(arch, shape, mesh, rules)
+    mf = RL.model_flops_for(cfg, spec["kind"], spec["batch"], spec["seq"])
+    return RL.Roofline(flops=c["flops"], hbm_bytes=c["bytes"],
+                       collective_bytes=c["coll"], chips=chips,
+                       model_flops=mf)

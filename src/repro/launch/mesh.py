@@ -1,0 +1,37 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run launcher must set XLA_FLAGS before first jax init).
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the `pod` axis is
+reserved for pure data parallelism (cheapest inter-pod traffic: one
+gradient all-reduce per step traverses DCN/optical links).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Generic helper with pjit-style Auto axis types."""
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(ndev: int | None = None, axis: str = "data"):
+    """A 1-D mesh over the locally visible devices (tests, examples)."""
+    n = ndev or len(jax.devices())
+    return make_mesh((n,), (axis,))
+
+
+def data_axis_names(mesh) -> tuple[str, ...]:
+    """Axes used for batch sharding: ('pod','data') when a pod axis exists."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

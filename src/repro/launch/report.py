@@ -1,0 +1,123 @@
+"""Render the dry-run artifacts into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m repro.launch.report             # markdown
+    PYTHONPATH=src python -m repro.launch.report --pick      # hillclimb picks
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "artifacts", "dryrun")
+
+
+def load_all(tag: str = "") -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        base = os.path.basename(path)
+        parts = base[:-5].split("__")
+        if tag and not base.endswith(f".{tag}.json"):
+            continue
+        if not tag and len(parts[-1].split(".")) > 1:
+            continue
+        with open(path) as f:
+            d = json.load(f)
+        d["_file"] = base
+        out.append(d)
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}µs"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def dryrun_table(cells: list[dict]) -> str:
+    rows = ["| arch | shape | mesh | status | compile | bytes/dev (args+tmp) | collective ops |",
+            "|---|---|---|---|---|---|---|"]
+    for d in cells:
+        mesh = "2x16x16" if d.get("multi_pod") else "16x16"
+        if d.get("status") == "skipped":
+            rows.append(f"| {d['arch']} | {d['shape']} | {mesh} | skipped"
+                        f" | — | — | — |")
+            continue
+        mem = d.get("memory", {})
+        gb = (mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)) / 2**30
+        det = d.get("roofline", {}).get("collective_detail", {})
+        ops = ",".join(f"{k}:{v}" for k, v in
+                       sorted(det.get("count", {}).items()))
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {mesh} | ok | "
+            f"{d.get('compile_s', 0):.1f}s | {gb:.2f} GiB | {ops or '—'} |")
+    return "\n".join(rows)
+
+
+def roofline_table(cells: list[dict], multi_pod: bool = False) -> str:
+    rows = ["| arch | shape | t_comp | t_mem | t_coll | bound | useful | roofline frac |",
+            "|---|---|---|---|---|---|---|---|"]
+    for d in cells:
+        if bool(d.get("multi_pod")) != multi_pod or d.get("status") != "ok":
+            continue
+        r = d.get("roofline_corrected") or d.get("roofline", {})
+        if not r:
+            continue
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {fmt_s(r['t_compute_s'])} | "
+            f"{fmt_s(r['t_memory_s'])} | {fmt_s(r['t_collective_s'])} | "
+            f"{r['bottleneck']} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+def picks(cells: list[dict]) -> dict:
+    """The three hillclimb cells: worst fraction, most collective-bound,
+    paper-representative (the query_step is always the third)."""
+    pod1 = [d for d in cells if not d.get("multi_pod")
+            and d.get("status") == "ok" and d.get("kind") != "query"]
+
+    def rc(d):
+        return d.get("roofline_corrected") or d["roofline"]
+
+    # worst fraction among heavyweight cells (train/prefill carry the flops)
+    heavy = [d for d in pod1 if d["kind"] in ("train", "prefill")]
+    worst = min(heavy, key=lambda d: rc(d)["roofline_fraction"])
+    coll = max(pod1, key=lambda d: (rc(d)["t_collective_s"] /
+                                    max(max(rc(d)["t_compute_s"],
+                                            rc(d)["t_memory_s"]), 1e-12)))
+    return {
+        "worst_fraction": (worst["arch"], worst["shape"],
+                           rc(worst)["roofline_fraction"]),
+        "most_collective": (coll["arch"], coll["shape"],
+                            rc(coll)["t_collective_s"] /
+                            max(rc(coll)["t_compute_s"], 1e-12)),
+        "paper": ("rdfviews-query-step", "star3_1000000000", None),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pick", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    cells = load_all(args.tag)
+    if args.pick:
+        print(json.dumps(picks(cells), indent=1))
+        return
+    print("## Dry-run (single-pod 16x16 + multi-pod 2x16x16)\n")
+    print(dryrun_table(cells))
+    print("\n## Roofline (single-pod, trip-count-corrected)\n")
+    print(roofline_table(cells, multi_pod=False))
+    print("\n## Roofline (multi-pod)\n")
+    print(roofline_table(cells, multi_pod=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,190 @@
+"""Dry-run cell definitions: (architecture x input shape) -> lowering spec.
+
+Shapes (assigned):
+  train_4k     seq=4096   global_batch=256   train_step
+  prefill_32k  seq=32768  global_batch=32    prefill (forward)
+  decode_32k   seq=32768  global_batch=128   serve decode (1 token, KV=32k)
+  long_500k    seq=524288 global_batch=1     long-context decode
+               (runs only for long_context archs: gemma3/rwkv6/zamba2)
+
+`input_specs(arch, shape)` returns ShapeDtypeStruct stand-ins for every
+input (weak-type-correct, shardable, zero allocation).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.distributed.sharding import (DECODE_RULES, DEFAULT_RULES,
+                                        FSDP_RULES, LONG_RULES,
+                                        param_shardings, spec_for)
+from repro.models.model import Model, build_model
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import TrainConfig, train_state_shapes
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+# >=20B-param configs need FSDP so optimizer state fits 16 GB/chip
+_FSDP_ARCHS = {"llama4-maverick-400b-a17b", "qwen2.5-32b", "deepseek-67b",
+               "granite-20b"}
+
+# whisper's stub frontend length comes from cfg.encoder.max_len (1536 =
+# 30s window padded so the cross-attention KV shards evenly on the mesh)
+
+
+def applicable(arch: str, shape: str) -> tuple[bool, str]:
+    cfg = get_config(arch)
+    if shape == "long_500k" and not cfg.long_context:
+        return False, ("pure full-attention architecture: 500k decode needs "
+                       "sub-quadratic attention / windowed KV (see DESIGN.md)")
+    return True, ""
+
+
+def rules_for(arch: str, shape: str) -> dict:
+    if SHAPES[shape]["kind"] == "decode":
+        return LONG_RULES if SHAPES[shape]["batch"] == 1 else DECODE_RULES
+    if SHAPES[shape]["kind"] == "train" and arch in _FSDP_ARCHS:
+        return FSDP_RULES
+    return DEFAULT_RULES
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    fn: Any                  # function to lower
+    args: tuple              # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    model: Model
+    rules: dict
+    donate: tuple = ()
+
+
+def _batch_specs(cfg, batch: int, seq: int, with_labels: bool):
+    b = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+    if with_labels:
+        b["labels"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    if cfg.mrope:
+        b["positions"] = jax.ShapeDtypeStruct((batch, seq, 3), jnp.int32)
+    if cfg.encoder is not None:
+        b["enc_frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder.max_len, cfg.encoder.d_input), jnp.bfloat16)
+    return b
+
+
+def _batch_shardings(mesh, batch_tree, rules):
+    from jax.sharding import NamedSharding
+
+    def for_leaf(x):
+        axes = ("batch",) + (None,) * (len(x.shape) - 1)
+        return NamedSharding(mesh, spec_for(axes, rules, mesh))
+
+    return jax.tree.map(for_leaf, batch_tree)
+
+
+def env_cfg(cfg):
+    """Apply perf-iteration overrides from the environment:
+    REPRO_ATTN=chunked|dense, REPRO_ATTN_CHUNK=<int>."""
+    import dataclasses
+    import os
+
+    impl = os.environ.get("REPRO_ATTN")
+    if impl:
+        cfg = dataclasses.replace(cfg, attn_impl=impl)
+    ck = os.environ.get("REPRO_ATTN_CHUNK")
+    if ck:
+        cfg = dataclasses.replace(cfg, attn_chunk=int(ck))
+    return cfg
+
+
+def make_cell(arch: str, shape: str, mesh, rules: dict | None = None,
+              tc: TrainConfig | None = None, cfg=None) -> Cell:
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    cfg = cfg if cfg is not None else get_config(arch)
+    cfg = env_cfg(cfg)
+    model = build_model(cfg)
+    spec = SHAPES[shape]
+    rules = rules or rules_for(arch, shape)
+    kind = spec["kind"]
+    seq, batch = spec["seq"], spec["batch"]
+
+    if kind == "train":
+        import os
+
+        import jax.numpy as _jnp
+        m_dt = {"bf16": _jnp.bfloat16, "f32": _jnp.float32}[
+            os.environ.get("REPRO_OPT_M_DTYPE", "f32")]
+        v_dt = {"bf16": _jnp.bfloat16, "f32": _jnp.float32}[
+            os.environ.get("REPRO_OPT_V_DTYPE", "f32")]
+        tc = tc or TrainConfig(opt=OptConfig(m_dtype=m_dt, v_dtype=v_dt),
+                               remat=os.environ.get("REPRO_REMAT", "full"))
+        from repro.train.train_step import (make_train_step,
+                                            train_state_shardings)
+
+        step = make_train_step(model, tc, mesh, rules)
+        state = train_state_shapes(model, tc, dtype=jnp.bfloat16)
+        batch_specs = _batch_specs(cfg, batch, seq, with_labels=True)
+        state_sh = train_state_shardings(model, tc, mesh, rules)
+        args = (state, batch_specs)
+        in_sh = (state_sh, _batch_shardings(mesh, batch_specs, rules))
+        return Cell(arch, shape, kind, step, args, in_sh, model, rules,
+                    donate=(0,))
+
+    params = model.param_shapes(jnp.bfloat16)
+    p_sh = param_shardings(model.template, rules, mesh)
+
+    if kind == "prefill":
+        def prefill(params, batch):
+            kw = {k: v for k, v in batch.items() if k != "tokens"}
+            from repro.distributed.sharding import axis_ctx
+
+            with axis_ctx(mesh, rules):
+                return model.forward(params, tokens=batch["tokens"], **kw)
+
+        batch_specs = _batch_specs(cfg, batch, seq, with_labels=False)
+        args = (params, batch_specs)
+        in_sh = (p_sh, _batch_shardings(mesh, batch_specs, rules))
+        return Cell(arch, shape, kind, prefill, args, in_sh, model, rules)
+
+    # decode: one token against a cache of length `seq`
+    enc_len = cfg.encoder.max_len if cfg.encoder is not None else 0
+    cache = model.cache_shapes(batch, seq, enc_len)
+    cache_axes = model.cache_axes()
+    cache_sh = jax.tree.map(
+        lambda sds, axes: NamedSharding(mesh, spec_for(axes, rules, mesh)),
+        cache, cache_axes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+    tok = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def decode(params, token, pos, cache):
+        from repro.distributed.sharding import axis_ctx
+
+        with axis_ctx(mesh, rules):
+            return model.decode_step(params, token, pos, cache)
+
+    args = (params, tok, pos, cache)
+    in_sh = (p_sh,
+             NamedSharding(mesh, spec_for(("batch", None), rules, mesh)),
+             NamedSharding(mesh, P()),
+             cache_sh)
+    return Cell(arch, shape, kind, decode, args, in_sh, model, rules,
+                donate=(3,))
+
+
+def all_cells() -> list[tuple[str, str]]:
+    return [(a, s) for a in list_archs() for s in SHAPES]

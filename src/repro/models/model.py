@@ -1,0 +1,65 @@
+"""Model facade: template + init + jit-able entry points per config."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.models.params import init_params, tree_axes, tree_shapes
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+
+    def __post_init__(self):
+        self.template = T.model_template(self.cfg)
+
+    # ------------------------------------------------------------------
+    def init(self, key: jax.Array, dtype=jnp.float32):
+        return init_params(self.template, key, dtype)
+
+    def param_shapes(self, dtype=jnp.bfloat16):
+        return tree_shapes(self.template, dtype)
+
+    def param_axes(self):
+        return tree_axes(self.template)
+
+    # ------------------------------------------------------------------
+    def forward(self, params, tokens=None, embeds=None, positions=None,
+                enc_frames=None, remat: str = "none"):
+        return T.forward(self.cfg, params, tokens=tokens, embeds=embeds,
+                         positions=positions, enc_frames=enc_frames,
+                         remat=remat)
+
+    def decode_step(self, params, token, pos, cache):
+        return T.decode_step(self.cfg, params, token, pos, cache)
+
+    def prefill_with_cache(self, params, tokens=None, embeds=None,
+                           positions=None, enc_frames=None,
+                           cache_len: int = 0):
+        return T.prefill_with_cache(self.cfg, params, tokens=tokens,
+                                    embeds=embeds, positions=positions,
+                                    enc_frames=enc_frames,
+                                    cache_len=cache_len)
+
+    def cache_shapes(self, batch: int, cache_len: int, enc_len: int = 0):
+        return T.cache_template(self.cfg, batch, cache_len, enc_len)
+
+    def cache_axes(self):
+        return T.cache_logical_axes(self.cfg)
+
+    def init_cache(self, batch: int, cache_len: int, enc_len: int = 0):
+        return jax.tree.map(
+            lambda sds: jnp.zeros(sds.shape, sds.dtype),
+            self.cache_shapes(batch, cache_len, enc_len),
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        )
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,63 @@
+"""Parameter templates: shapes + logical sharding axes + initializers.
+
+A model is described as a pytree of `ParamSpec`s; the same template
+yields (i) materialized params, (ii) ShapeDtypeStructs for the dry-run
+(no allocation), and (iii) NamedShardings via the logical-axis rules
+(distributed/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]   # logical axis name per dim
+    init: str = "normal"           # normal | zeros | ones | scaled
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_shapes(template, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), template, is_leaf=is_spec
+    )
+
+
+def tree_axes(template):
+    return jax.tree.map(lambda s: s.axes, template, is_leaf=is_spec)
+
+
+def init_params(template, key: jax.Array, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(template, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+
+    def mk(spec: ParamSpec, k):
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dtype)
+        if spec.init == "scaled":  # fan-in scaled
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            std = spec.scale / math.sqrt(max(fan_in, 1))
+            return (jax.random.normal(k, spec.shape, dtype) * std).astype(dtype)
+        return (jax.random.normal(k, spec.shape, dtype) * 0.02 * spec.scale).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [mk(s, k) for s, k in zip(leaves, keys)])
+
+
+def count_params(template) -> int:
+    leaves = jax.tree.leaves(template, is_leaf=is_spec)
+    return sum(int(math.prod(s.shape)) for s in leaves)

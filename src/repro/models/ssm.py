@@ -1,0 +1,339 @@
+"""Attention-free blocks: Mamba2 (SSD, chunked) and RWKV6 (Finch).
+
+Mamba2 uses the chunked SSD algorithm (intra-chunk quadratic matmuls +
+inter-chunk state scan): MXU-dense work instead of a length-T sequential
+loop — the TPU-native adaptation.  RWKV6's per-channel data-dependent
+decay does not factor into chunk matmuls, so training uses a time scan
+(`lax.scan`, compact HLO); decode is O(1)-state for both.
+
+Decode state:
+  mamba2: {"ssm": (B, nh, P, N), "conv": (B, d_conv-1, conv_dim)}
+  rwkv6:  {"wkv": (B, H, hd, hd), "shift_t": (B, d), "shift_c": (B, d)}
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rmsnorm, rmsnorm_template
+from repro.models.params import ParamSpec
+
+
+# ======================================================================
+# Mamba2
+# ======================================================================
+def mamba2_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = s.n_heads or d_in // s.head_dim
+    conv_dim = d_in + 2 * s.state_dim
+    return d_in, nh, conv_dim
+
+
+def mamba2_template(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    s = cfg.ssm
+    d_in, nh, conv_dim = mamba2_dims(cfg)
+    return {
+        "norm": rmsnorm_template(d),
+        # in_proj -> [z, x, B, C, dt]
+        "w_in": ParamSpec((d, 2 * d_in + 2 * s.state_dim + nh),
+                          ("embed", "mlp"), init="scaled"),
+        "conv_w": ParamSpec((s.d_conv, conv_dim), (None, "mlp"), init="scaled"),
+        "conv_b": ParamSpec((conv_dim,), ("mlp",), init="zeros"),
+        "a_log": ParamSpec((nh,), (None,), init="zeros"),
+        "dt_bias": ParamSpec((nh,), (None,), init="zeros"),
+        "d_skip": ParamSpec((nh,), (None,), init="ones"),
+        "gate_norm": rmsnorm_template(d_in),
+        "w_out": ParamSpec((d_in, d), ("mlp", "embed"), init="scaled"),
+    }
+
+
+def _split_in(cfg, proj):
+    s = cfg.ssm
+    d_in, nh, _ = mamba2_dims(cfg)
+    z, x, Bm, Cm, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + s.state_dim, 2 * d_in + 2 * s.state_dim],
+        axis=-1,
+    )
+    return z, x, Bm, Cm, dt
+
+
+def _causal_conv_train(x, w, b):
+    """x: (B,S,C) depthwise causal conv, window K."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for k in range(K):
+        out = out + pad[:, k: k + x.shape[1], :] * w[k]
+    return out + b
+
+
+def mamba2_train(p, cfg: ModelConfig, h, return_state: bool = False):
+    """h: (B,S,d) -> (B,S,d) via chunked SSD.
+
+    return_state=True also returns the decode-ready recurrent state
+    ({"ssm": final state, "conv": last d_conv-1 raw conv inputs})."""
+    s = cfg.ssm
+    d_in, nh, conv_dim = mamba2_dims(cfg)
+    P, N, C = s.head_dim, s.state_dim, s.chunk
+    B, S, _ = h.shape
+    assert S % C == 0, f"seq {S} must be a multiple of chunk {C}"
+    nc = S // C
+
+    y0 = rmsnorm(p["norm"], h, cfg.norm_eps)
+    proj = jnp.einsum("bsd,de->bse", y0, p["w_in"].astype(h.dtype))
+    z, x, Bm, Cm, dt = _split_in(cfg, proj)
+    xbc_raw = jnp.concatenate([x, Bm, Cm], axis=-1)
+    xbc = jax.nn.silu(_causal_conv_train(xbc_raw, p["conv_w"].astype(h.dtype),
+                                         p["conv_b"].astype(h.dtype)))
+    x, Bm, Cm = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))        # (nh,) < 0
+    la = dt * A                                          # log decay (B,S,nh)
+
+    xh = x.reshape(B, S, nh, P)
+    xdt = xh.astype(jnp.float32) * dt[..., None]         # B(t) x(t) dt(t)
+
+    # chunk
+    xc = xdt.reshape(B, nc, C, nh, P)
+    lac = la.reshape(B, nc, C, nh)
+    Bc = Bm.astype(jnp.float32).reshape(B, nc, C, N)
+    Cc = Cm.astype(jnp.float32).reshape(B, nc, C, N)
+    cum = jnp.cumsum(lac, axis=2)                        # inclusive (B,nc,C,nh)
+
+    # ---- intra-chunk: y[t] += sum_{s<=t} exp(cum_t - cum_s) (C_t.B_s) x_s
+    scores = jnp.einsum("bztn,bzsn->bzts", Cc, Bc)       # (B,nc,C,C)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,t,s,nh)
+    tri = jnp.tril(jnp.ones((C, C), bool))
+    M = scores[..., None] * jnp.where(tri[None, None, :, :, None], decay, 0.0)
+    y_intra = jnp.einsum("bztsh,bzshp->bzthp", M, xc)
+
+    # ---- chunk states: S_z = sum_s exp(cum_last - cum_s) B_s x_s^T
+    state_decay = jnp.exp(cum[:, :, -1:, :] - cum)       # (B,nc,C,nh)
+    states = jnp.einsum("bzsn,bzsh,bzshp->bzhnp", Bc, state_decay, xc)
+
+    # ---- inter-chunk scan: h_z = exp(cum_last) h_{z-1} + S_z
+    chunk_decay = jnp.exp(cum[:, :, -1, :])              # (B,nc,nh)
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                                # emit PREVIOUS state
+
+    init = jnp.zeros((B, nh, N, P), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)   # (B,nc,nh,N,P)
+
+    # ---- inter-chunk contribution: y[t] += exp(cum_t) C_t . h_{prev}
+    in_decay = jnp.exp(cum)                              # (B,nc,C,nh)
+    y_inter = jnp.einsum("bztn,bzth,bzhnp->bzthp", Cc, in_decay, prev_states)
+
+    y = (y_intra + y_inter).reshape(B, S, nh, P)
+    y = y + xh.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, d_in).astype(h.dtype)
+    y = rmsnorm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(h.dtype))
+    if return_state:
+        tail = xbc_raw[:, -(s.d_conv - 1):].astype(jnp.float32)
+        return out, {"ssm": final_state, "conv": tail}
+    return out
+
+
+def mamba2_state_template(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    d_in, nh, conv_dim = mamba2_dims(cfg)
+    return {
+        "ssm": jax.ShapeDtypeStruct((batch, nh, s.state_dim, s.head_dim), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, s.d_conv - 1, conv_dim), jnp.float32),
+    }
+
+
+def mamba2_decode(p, cfg: ModelConfig, h, state):
+    """h: (B,1,d); O(1) recurrent update."""
+    s = cfg.ssm
+    d_in, nh, conv_dim = mamba2_dims(cfg)
+    P, N = s.head_dim, s.state_dim
+    B = h.shape[0]
+    y0 = rmsnorm(p["norm"], h, cfg.norm_eps)
+    proj = jnp.einsum("bsd,de->bse", y0, p["w_in"].astype(h.dtype))
+    z, x, Bm, Cm, dt = _split_in(cfg, proj)
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)[:, 0]    # (B, conv_dim)
+    window = jnp.concatenate([state["conv"], xbc[:, None, :].astype(jnp.float32)], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))
+    x, Bm, Cm = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A)                                   # (B,nh)
+    xh = x.reshape(B, nh, P).astype(jnp.float32) * dt[..., None]
+    new_ssm = state["ssm"] * a[:, :, None, None] + jnp.einsum(
+        "bn,bhp->bhnp", Bm, xh)
+    y = jnp.einsum("bn,bhnp->bhp", Cm, new_ssm)
+    y = y + x.reshape(B, nh, P).astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, d_in).astype(h.dtype)
+    y = rmsnorm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(h.dtype))
+    new_state = {"ssm": new_ssm, "conv": window[:, 1:]}
+    return out, new_state
+
+
+# ======================================================================
+# RWKV6 (Finch)
+# ======================================================================
+RWKV_LORA = 64
+
+
+def rwkv6_dims(cfg: ModelConfig):
+    hd = cfg.ssm.head_dim if cfg.ssm else 64
+    nh = cfg.d_model // hd
+    return nh, hd
+
+
+def rwkv6_template(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    nh, hd = rwkv6_dims(cfg)
+    return {
+        "norm_t": rmsnorm_template(d),
+        "mu": ParamSpec((5, d), (None, "embed")),        # shift mix (r,k,v,g,w)
+        "wr": ParamSpec((d, d), ("embed", "heads"), init="scaled"),
+        "wk": ParamSpec((d, d), ("embed", "heads"), init="scaled"),
+        "wv": ParamSpec((d, d), ("embed", "heads"), init="scaled"),
+        "wg": ParamSpec((d, d), ("embed", "heads"), init="scaled"),
+        "w_lora_a": ParamSpec((d, RWKV_LORA), ("embed", None), init="scaled"),
+        "w_lora_b": ParamSpec((RWKV_LORA, d), (None, "heads"), init="scaled"),
+        "w_base": ParamSpec((d,), ("heads",), init="zeros"),
+        "u_bonus": ParamSpec((nh, hd), (None, None), init="zeros"),
+        "ln_out": rmsnorm_template(d),
+        "wo": ParamSpec((d, d), ("heads", "embed"), init="scaled"),
+        # channel mix
+        "norm_c": rmsnorm_template(d),
+        "mu_c": ParamSpec((2, d), (None, "embed")),
+        "wk_c": ParamSpec((d, f), ("embed", "mlp"), init="scaled"),
+        "wv_c": ParamSpec((f, d), ("mlp", "embed"), init="scaled"),
+        "wr_c": ParamSpec((d, d), ("embed", "embed"), init="scaled"),
+    }
+
+
+def _shift(x, prev=None):
+    """Token shift: x_{t-1} (zero / `prev` for t=0). x: (B,S,d)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = prev[:, None, :]
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _rwkv_mix(p, cfg, x, shifted):
+    """Projections with token-shift lerp; returns r,k,v,g,w (log decay)."""
+    mu = p["mu"].astype(x.dtype)                          # (5,d)
+    def lerp(i):
+        return x + (shifted - x) * mu[i]
+    r = jnp.einsum("bsd,dh->bsh", lerp(0), p["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,dh->bsh", lerp(1), p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dh->bsh", lerp(2), p["wv"].astype(x.dtype))
+    g = jnp.einsum("bsd,dh->bsh", lerp(3), p["wg"].astype(x.dtype))
+    lora = jnp.tanh(jnp.einsum("bsd,dl->bsl", lerp(4), p["w_lora_a"].astype(x.dtype)))
+    w_raw = p["w_base"].astype(jnp.float32) + jnp.einsum(
+        "bsl,lh->bsh", lora, p["w_lora_b"].astype(x.dtype)).astype(jnp.float32)
+    # data-dependent per-channel decay in (0,1): w = exp(-exp(w_raw))
+    log_w = -jnp.exp(w_raw - 3.0)                         # (B,S,d) log decay <= 0
+    return r, k, v, g, log_w
+
+
+def rwkv6_time_mix_train(p, cfg: ModelConfig, h, shift_state=None, wkv_state=None):
+    """(B,S,d) -> (B,S,d); sequential WKV scan over time."""
+    nh, hd = rwkv6_dims(cfg)
+    B, S, d = h.shape
+    x = rmsnorm(p["norm_t"], h, cfg.norm_eps)
+    shifted = _shift(x, shift_state)
+    r, k, v, g, log_w = _rwkv_mix(p, cfg, x, shifted)
+    rh = r.reshape(B, S, nh, hd).astype(jnp.float32)
+    kh = k.reshape(B, S, nh, hd).astype(jnp.float32)
+    vh = v.reshape(B, S, nh, hd).astype(jnp.float32)
+    wh = jnp.exp(log_w.reshape(B, S, nh, hd))             # decay in (0,1)
+    u = p["u_bonus"].astype(jnp.float32)                  # (nh,hd)
+
+    def step(S_carry, inp):
+        rt, kt, vt, wt = inp                              # (B,nh,hd) each
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S_carry + u[None, :, :, None] * kv)
+        S_new = S_carry * wt[..., None] + kv
+        return S_new, out
+
+    init = (jnp.zeros((B, nh, hd, hd), jnp.float32) if wkv_state is None
+            else wkv_state)
+    S_fin, outs = jax.lax.scan(
+        step, init,
+        (rh.transpose(1, 0, 2, 3), kh.transpose(1, 0, 2, 3),
+         vh.transpose(1, 0, 2, 3), wh.transpose(1, 0, 2, 3)),
+    )
+    out = outs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(h.dtype)
+    out = rmsnorm(p["ln_out"], out, cfg.norm_eps) * jax.nn.silu(g)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(h.dtype))
+    return out, x[:, -1], S_fin
+
+
+def rwkv6_channel_mix(p, cfg: ModelConfig, h, shift_state=None):
+    x = rmsnorm(p["norm_c"], h, cfg.norm_eps)
+    shifted = _shift(x, shift_state)
+    mu = p["mu_c"].astype(x.dtype)
+    xk = x + (shifted - x) * mu[0]
+    xr = x + (shifted - x) * mu[1]
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk_c"].astype(x.dtype))
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv_c"].astype(x.dtype))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr_c"].astype(x.dtype)))
+    return r * kv, x[:, -1]
+
+
+def rwkv6_state_template(cfg: ModelConfig, batch: int):
+    nh, hd = rwkv6_dims(cfg)
+    d = cfg.d_model
+    return {
+        "wkv": jax.ShapeDtypeStruct((batch, nh, hd, hd), jnp.float32),
+        "shift_t": jax.ShapeDtypeStruct((batch, d), jnp.float32),
+        "shift_c": jax.ShapeDtypeStruct((batch, d), jnp.float32),
+    }
+
+
+def rwkv6_decode(p, cfg: ModelConfig, h, state):
+    """h: (B,1,d) one-step; returns (delta_out_pair, new_state)."""
+    x = rmsnorm(p["norm_t"], h, cfg.norm_eps)
+    shifted = state["shift_t"][:, None, :].astype(x.dtype)
+    r, k, v, g, log_w = _rwkv_mix(p, cfg, x, shifted)
+    nh, hd = rwkv6_dims(cfg)
+    B = h.shape[0]
+    rt = r.reshape(B, nh, hd).astype(jnp.float32)
+    kt = k.reshape(B, nh, hd).astype(jnp.float32)
+    vt = v.reshape(B, nh, hd).astype(jnp.float32)
+    wt = jnp.exp(log_w.reshape(B, nh, hd))
+    u = p["u_bonus"].astype(jnp.float32)
+    kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+    out = jnp.einsum("bhk,bhkv->bhv", rt, state["wkv"] + u[None, :, :, None] * kv)
+    new_wkv = state["wkv"] * wt[..., None] + kv
+    out = out.reshape(B, 1, cfg.d_model).astype(h.dtype)
+    out = rmsnorm(p["ln_out"], out, cfg.norm_eps) * jax.nn.silu(g)
+    t_out = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(h.dtype))
+    h1 = h + t_out
+    xc = rmsnorm(p["norm_c"], h1, cfg.norm_eps)
+    shifted_c = state["shift_c"][:, None, :].astype(xc.dtype)
+    mu = p["mu_c"].astype(xc.dtype)
+    xk = xc + (shifted_c - xc) * mu[0]
+    xr = xc + (shifted_c - xc) * mu[1]
+    kc = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["wk_c"].astype(xc.dtype))))
+    kvc = jnp.einsum("bsf,fd->bsd", kc, p["wv_c"].astype(xc.dtype))
+    rc = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr_c"].astype(xc.dtype)))
+    h2 = h1 + rc * kvc
+    new_state = {
+        "wkv": new_wkv,
+        "shift_t": x[:, -1].astype(jnp.float32),
+        "shift_c": xc[:, -1].astype(jnp.float32),
+    }
+    return h2 - h, new_state

@@ -1,0 +1,413 @@
+"""The composable stack: layer groups scanned over stacked parameters.
+
+One `group` = one instance of cfg.block_pattern; the full model is
+`lax.scan` over `n_groups` stacked group-parameter pytrees, keeping the
+HLO compact (deepseek-67b's 95 layers compile as one loop).  Shared
+blocks (zamba2) live OUTSIDE the scanned pytree and are applied inside
+the group body via closure.
+
+Three entry points:
+  forward(...)          logits for a full sequence (training / prefill)
+  prefill(...)          forward + KV/recurrent cache construction
+  decode_step(...)      one-token serving step updating the cache
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_act
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+from repro.models.params import ParamSpec, is_spec
+
+
+# ----------------------------------------------------------------------
+# templates
+# ----------------------------------------------------------------------
+def layer_template(cfg: ModelConfig, kind: str) -> dict:
+    if kind in ("attn", "swa"):
+        t = {"attn": L.attention_template(cfg)}
+        if cfg.encoder is not None:
+            t["xattn"] = L.attention_template(cfg, cross=True)
+        t["ffn"] = L.moe_template(cfg) if cfg.moe else L.mlp_template(cfg)
+        return t
+    if kind == "mamba2":
+        return {"mamba": S.mamba2_template(cfg)}
+    if kind == "mamba2_shared":
+        return {"mamba": S.mamba2_template(cfg)}  # shared attn is global
+    if kind == "rwkv6":
+        return {"rwkv": S.rwkv6_template(cfg)}
+    raise ValueError(kind)
+
+
+def group_template(cfg: ModelConfig) -> dict:
+    return {
+        f"{i}:{kind}": layer_template(cfg, kind)
+        for i, kind in enumerate(cfg.block_pattern)
+    }
+
+
+def _stack_specs(t, n: int):
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layer",) + s.axes, s.init, s.scale),
+        t, is_leaf=is_spec,
+    )
+
+
+def encoder_template(cfg: ModelConfig) -> dict:
+    e = cfg.encoder
+    layer = {
+        "attn": L.attention_template(cfg),
+        "ffn": L.mlp_template(cfg),
+    }
+    return {
+        "frontend": ParamSpec((e.d_input, cfg.d_model), (None, "embed"), init="scaled"),
+        "pos": ParamSpec((e.max_len, cfg.d_model), (None, "embed")),
+        "layers": _stack_specs(layer, e.n_layers),
+        "final_norm": L.rmsnorm_template(cfg.d_model),
+    }
+
+
+def model_template(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    t: dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab_padded, d), ("vocab", "embed")),
+        "groups": _stack_specs(group_template(cfg), cfg.n_groups),
+        "final_norm": L.rmsnorm_template(d),
+    }
+    if not cfg.tie_embeddings:
+        t["lm_head"] = ParamSpec((d, cfg.vocab_padded), ("embed", "vocab"),
+                                 init="scaled")
+    if "mamba2_shared" in cfg.block_pattern:
+        t["shared"] = {
+            "attn": L.attention_template(cfg),
+            "ffn": L.mlp_template(cfg),
+        }
+    if cfg.encoder is not None:
+        t["encoder"] = encoder_template(cfg)
+    return t
+
+
+# ----------------------------------------------------------------------
+# layer application (train / prefill path)
+# ----------------------------------------------------------------------
+def _apply_layer_train(cfg: ModelConfig, kind: str, p, h, positions,
+                       shared=None, enc_out=None):
+    if kind in ("attn", "swa"):
+        window = cfg.window if kind == "swa" else 0
+        theta = cfg.rope_theta if kind == "attn" else getattr(
+            cfg, "rope_theta_local", cfg.rope_theta)
+        h = h + L.attention_train(p["attn"], cfg, h, positions, window=window,
+                                  theta=theta)
+        h = shard_act(h, ("batch", "seq", "embed"))
+        if enc_out is not None and "xattn" in p:
+            h = h + L.attention_train(p["xattn"], cfg, h, positions,
+                                      kv_src=enc_out, causal=False)
+        ffn = L.moe if cfg.moe else L.mlp
+        h = h + ffn(p["ffn"], cfg, h)
+        h = shard_act(h, ("batch", "seq", "embed"))
+        return h
+    if kind in ("mamba2", "mamba2_shared"):
+        h = h + S.mamba2_train(p["mamba"], cfg, h)
+        h = shard_act(h, ("batch", "seq", "embed"))
+        if kind == "mamba2_shared":
+            assert shared is not None
+            h = h + L.attention_train(shared["attn"], cfg, h, positions)
+            h = h + L.mlp(shared["ffn"], cfg, h)
+            h = shard_act(h, ("batch", "seq", "embed"))
+        return h
+    if kind == "rwkv6":
+        t_out, _, _ = S.rwkv6_time_mix_train(p["rwkv"], cfg, h)
+        h = h + t_out
+        c_out, _ = S.rwkv6_channel_mix(p["rwkv"], cfg, h)
+        h = h + c_out
+        return shard_act(h, ("batch", "seq", "embed"))
+    raise ValueError(kind)
+
+
+def _embed_in(cfg: ModelConfig, params, tokens=None, embeds=None):
+    if embeds is None:
+        embeds = jnp.take(params["embed"], tokens, axis=0)
+        embeds = embeds * jnp.asarray(
+            jnp.sqrt(cfg.d_model), embeds.dtype)
+    return shard_act(embeds, ("batch", "seq", "embed"))
+
+
+def _unembed(cfg: ModelConfig, params, h):
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head.astype(h.dtype))
+    if cfg.vocab_padded != cfg.vocab:
+        pad_mask = jnp.arange(cfg.vocab_padded) < cfg.vocab
+        logits = jnp.where(pad_mask, logits, L.NEG_INF)
+    return shard_act(logits, ("batch", "seq", "vocab"))
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """Whisper-style encoder over stub frame embeddings (B,T,d_input)."""
+    e = params["encoder"]
+    h = jnp.einsum("bti,id->btd", frames, e["frontend"].astype(frames.dtype))
+    h = h + e["pos"][: h.shape[1]].astype(h.dtype)
+    h = shard_act(h, ("batch", "seq", "embed"))
+    positions = jnp.broadcast_to(
+        jnp.arange(h.shape[1], dtype=jnp.int32), h.shape[:2])
+
+    def body(carry, lp):
+        x = carry
+        x = x + L.attention_train(lp["attn"], cfg, x, positions, causal=False)
+        x = x + L.mlp(lp["ffn"], cfg, x)
+        return shard_act(x, ("batch", "seq", "embed")), None
+
+    h, _ = jax.lax.scan(body, h, e["layers"])
+    return L.rmsnorm(e["final_norm"], h, cfg.norm_eps)
+
+
+def forward(cfg: ModelConfig, params, tokens=None, embeds=None,
+            positions=None, enc_frames=None, remat: str = "none"):
+    """Full-sequence logits.  remat: none|full (checkpoint each group)."""
+    h = _embed_in(cfg, params, tokens, embeds)
+    B, Sq = h.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions[..., None], (B, Sq, 3))
+    enc_out = encode(cfg, params, enc_frames) if enc_frames is not None else None
+    shared = params.get("shared")
+
+    def group_body(carry, gp):
+        x = carry
+        for i, kind in enumerate(cfg.block_pattern):
+            x = _apply_layer_train(cfg, kind, gp[f"{i}:{kind}"], x, positions,
+                                   shared=shared, enc_out=enc_out)
+        return x, None
+
+    body = group_body
+    if remat == "full":
+        body = jax.checkpoint(group_body, prevent_cse=False)
+    elif remat == "dots":
+        # save matmul results; recompute only cheap elementwise chains
+        body = jax.checkpoint(
+            group_body, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    h, _ = jax.lax.scan(body, h, params["groups"])
+    return _unembed(cfg, params, h)
+
+
+def _apply_layer_prefill(cfg: ModelConfig, kind: str, p, h, positions,
+                         cache_len: int, shared=None, enc_out=None):
+    """Like _apply_layer_train but also emits the decode-ready cache
+    entry for this layer (keys match _layer_cache_template)."""
+    if kind in ("attn", "swa"):
+        window = cfg.window if kind == "swa" else 0
+        theta = cfg.rope_theta if kind == "attn" else getattr(
+            cfg, "rope_theta_local", cfg.rope_theta)
+        att, (k, v) = L.attention_train(p["attn"], cfg, h, positions,
+                                        window=window, theta=theta,
+                                        return_kv=True)
+        h = h + att
+        ck, cv = L.kv_into_cache(k, v, cache_len, window)
+        entry = {"k": ck, "v": cv}
+        if enc_out is not None and "xattn" in p:
+            h = h + L.attention_train(p["xattn"], cfg, h, positions,
+                                      kv_src=enc_out, causal=False)
+            # cross-attention KV is computed once from the encoder output
+            kv_in = L.rmsnorm(p["xattn"]["norm"], enc_out, cfg.norm_eps)
+            xk = jnp.einsum("btd,dh->bth", kv_in,
+                            p["xattn"]["wk"].astype(h.dtype))
+            xv = jnp.einsum("btd,dh->bth", kv_in,
+                            p["xattn"]["wv"].astype(h.dtype))
+            B, T = xk.shape[:2]
+            entry["xk"] = xk.reshape(B, T, cfg.n_kv_heads, cfg.hd
+                                     ).astype(jnp.bfloat16)
+            entry["xv"] = xv.reshape(B, T, cfg.n_kv_heads, cfg.hd
+                                     ).astype(jnp.bfloat16)
+        ffn = L.moe if cfg.moe else L.mlp
+        h = h + ffn(p["ffn"], cfg, h)
+        return h, entry
+    if kind in ("mamba2", "mamba2_shared"):
+        out, state = S.mamba2_train(p["mamba"], cfg, h, return_state=True)
+        h = h + out
+        entry = dict(state)
+        if kind == "mamba2_shared":
+            att, (k, v) = L.attention_train(shared["attn"], cfg, h, positions,
+                                            return_kv=True)
+            h = h + att
+            h = h + L.mlp(shared["ffn"], cfg, h)
+            ck, cv = L.kv_into_cache(k, v, cache_len, 0)
+            entry["shared_k"] = ck
+            entry["shared_v"] = cv
+        return h, entry
+    if kind == "rwkv6":
+        t_out, x_last_t, wkv = S.rwkv6_time_mix_train(p["rwkv"], cfg, h)
+        h = h + t_out
+        c_out, x_last_c = S.rwkv6_channel_mix(p["rwkv"], cfg, h)
+        h = h + c_out
+        return h, {"wkv": wkv, "shift_t": x_last_t.astype(jnp.float32),
+                   "shift_c": x_last_c.astype(jnp.float32)}
+    raise ValueError(kind)
+
+
+def prefill_with_cache(cfg: ModelConfig, params, tokens=None, embeds=None,
+                       positions=None, enc_frames=None, cache_len: int = 0):
+    """Forward pass that ALSO builds the decode cache (the production
+    prefill->decode handoff).  Returns (logits, cache)."""
+    h = _embed_in(cfg, params, tokens, embeds)
+    B, Sq = h.shape[:2]
+    assert cache_len >= Sq, "cache must hold the prefill"
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions[..., None], (B, Sq, 3))
+    enc_out = encode(cfg, params, enc_frames) if enc_frames is not None else None
+    shared = params.get("shared")
+
+    def group_body(carry, gp):
+        x = carry
+        entries = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            x, entries[f"{i}:{kind}"] = _apply_layer_prefill(
+                cfg, kind, gp[f"{i}:{kind}"], x, positions, cache_len,
+                shared=shared, enc_out=enc_out)
+        return x, entries
+
+    h, cache = jax.lax.scan(group_body, h, params["groups"])
+    return _unembed(cfg, params, h), cache
+
+
+# ----------------------------------------------------------------------
+# serving: cache templates, prefill, decode
+# ----------------------------------------------------------------------
+def _layer_cache_template(cfg: ModelConfig, kind: str, batch: int,
+                          cache_len: int, enc_len: int = 0) -> dict:
+    hd = cfg.hd
+    kv = cfg.n_kv_heads
+    if kind in ("attn", "swa"):
+        T = min(cfg.window, cache_len) if kind == "swa" and cfg.window else cache_len
+        t = {
+            "k": jax.ShapeDtypeStruct((batch, T, kv, hd), jnp.bfloat16),
+            "v": jax.ShapeDtypeStruct((batch, T, kv, hd), jnp.bfloat16),
+        }
+        if cfg.encoder is not None:
+            t["xk"] = jax.ShapeDtypeStruct((batch, enc_len, kv, hd), jnp.bfloat16)
+            t["xv"] = jax.ShapeDtypeStruct((batch, enc_len, kv, hd), jnp.bfloat16)
+        return t
+    if kind == "mamba2":
+        return S.mamba2_state_template(cfg, batch)
+    if kind == "mamba2_shared":
+        return {
+            **S.mamba2_state_template(cfg, batch),
+            "shared_k": jax.ShapeDtypeStruct((batch, cache_len, kv, hd), jnp.bfloat16),
+            "shared_v": jax.ShapeDtypeStruct((batch, cache_len, kv, hd), jnp.bfloat16),
+        }
+    if kind == "rwkv6":
+        return S.rwkv6_state_template(cfg, batch)
+    raise ValueError(kind)
+
+
+def cache_template(cfg: ModelConfig, batch: int, cache_len: int,
+                   enc_len: int = 0) -> dict:
+    per_group = {
+        f"{i}:{kind}": _layer_cache_template(cfg, kind, batch, cache_len, enc_len)
+        for i, kind in enumerate(cfg.block_pattern)
+    }
+    return jax.tree.map(
+        lambda sds: jax.ShapeDtypeStruct((cfg.n_groups,) + sds.shape, sds.dtype),
+        per_group,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def cache_logical_axes(cfg: ModelConfig) -> dict:
+    """Logical axes parallel to cache_template (for dry-run shardings)."""
+    def axes_for(path_kind: str, name: str, ndim: int):
+        if name in ("k", "v", "xk", "xv", "shared_k", "shared_v"):
+            return ("layer", "batch", "seq_cache", "kv_heads", None)
+        if name == "wkv":
+            return ("layer", "batch", "kv_heads", None, "state_feat")
+        if name == "ssm":
+            return ("layer", "batch", "kv_heads", None, "state_feat")
+        if name == "conv":
+            return ("layer", "batch", None, "mlp")
+        if name in ("shift_t", "shift_c"):
+            return ("layer", "batch", "embed")
+        return ("layer",) + (None,) * (ndim - 1)
+
+    t = cache_template(cfg, 1, 2)
+    out = {}
+    for lk, entries in t.items():
+        out[lk] = {
+            name: axes_for(lk, name, v.ndim) for name, v in entries.items()
+        }
+    return out
+
+
+def _apply_layer_decode(cfg: ModelConfig, kind: str, p, h, pos, cache,
+                        shared=None):
+    if kind in ("attn", "swa"):
+        window = cfg.window if kind == "swa" else 0
+        theta = cfg.rope_theta if kind == "attn" else getattr(
+            cfg, "rope_theta_local", cfg.rope_theta)
+        att, new_kv = L.attention_decode(p["attn"], cfg, h, pos,
+                                         {"k": cache["k"], "v": cache["v"]},
+                                         window=window, theta=theta)
+        h = h + att
+        new_cache = dict(cache)
+        new_cache.update(new_kv)
+        if cfg.encoder is not None and "xattn" in p:
+            # cross attention against the prefilled encoder KV
+            y = L.rmsnorm(p["xattn"]["norm"], h, cfg.norm_eps)
+            q = jnp.einsum("bsd,dh->bsh", y, p["xattn"]["wq"].astype(h.dtype))
+            B = h.shape[0]
+            q = q.reshape(B, 1, cfg.n_heads, cfg.hd)
+            scores = L._gqa_scores(q, cache["xk"].astype(h.dtype))
+            probs = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(h.dtype)
+            out = L._gqa_out(probs, cache["xv"].astype(h.dtype))
+            h = h + jnp.einsum("bsh,hd->bsd", out, p["xattn"]["wo"].astype(h.dtype))
+        ffn = L.moe if cfg.moe else L.mlp
+        h = h + ffn(p["ffn"], cfg, h)
+        return h, new_cache
+    if kind in ("mamba2", "mamba2_shared"):
+        out, new_state = S.mamba2_decode(
+            p["mamba"], cfg, h, {"ssm": cache["ssm"], "conv": cache["conv"]})
+        h = h + out
+        new_cache = dict(cache)
+        new_cache.update(new_state)
+        if kind == "mamba2_shared":
+            att, new_kv = L.attention_decode(
+                shared["attn"], cfg, h, pos,
+                {"k": cache["shared_k"], "v": cache["shared_v"]})
+            h = h + att
+            h = h + L.mlp(shared["ffn"], cfg, h)
+            new_cache["shared_k"] = new_kv["k"]
+            new_cache["shared_v"] = new_kv["v"]
+        return h, new_cache
+    if kind == "rwkv6":
+        delta, new_state = S.rwkv6_decode(p["rwkv"], cfg, h, cache)
+        return h + delta, new_state
+    raise ValueError(kind)
+
+
+def decode_step(cfg: ModelConfig, params, token, pos, cache):
+    """One serving step: token (B,1) int32, pos scalar int32, cache pytree
+    with leading n_groups dim on every leaf.  Returns (logits, new_cache)."""
+    h = _embed_in(cfg, params, token)
+    shared = params.get("shared")
+
+    def group_body(carry, xs):
+        x = carry
+        gp, gc = xs
+        new_gc = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            key = f"{i}:{kind}"
+            x, new_gc[key] = _apply_layer_decode(cfg, kind, gp[key], x, pos,
+                                                 gc[key], shared=shared)
+        return x, new_gc
+
+    h, new_cache = jax.lax.scan(group_body, h, (params["groups"], cache))
+    logits = _unembed(cfg, params, h)
+    return logits, new_cache

@@ -1,0 +1,178 @@
+"""The triple table (TT): dictionary-encoded int32 triples + sorted indexes.
+
+Storage model (TPU adaptation of the paper's RDBMS triple table):
+  * one (N, 3) int32 array of deduplicated triples,
+  * three sorted copies — SPO, POS, OSP — so that every bound-prefix
+    access path is a contiguous range located by binary search
+    (`searchsorted` on a fused uint64 key), the vectorized analogue of a
+    clustered B-tree.
+
+`Statistics` feeds the cost model (core/quality.py) and the static
+capacity planner of the JAX engine.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+# all six orders (Hexastore [7] / RDF-3X [4], both cited by the paper):
+# any bound prefix is a contiguous range AND the scan can emit rows
+# pre-sorted on the column a downstream merge join needs (sort elision)
+_ORDERS = {
+    "spo": (0, 1, 2), "pos": (1, 2, 0), "osp": (2, 0, 1),
+    "pso": (1, 0, 2), "ops": (2, 1, 0), "sop": (0, 2, 1),
+}
+
+
+def _fuse_keys(cols: np.ndarray) -> np.ndarray:
+    """Fuse 2 leading sort columns into one uint64 key (ids are < 2^31)."""
+    c = cols.astype(np.uint64)
+    return (c[:, 0] << np.uint64(32)) | c[:, 1]
+
+
+# keep a full object-value histogram for predicates with at most this many
+# distinct objects (rdf:type and other categorical predicates): exact
+# per-class counts instead of uniform averages.
+_HIST_MAX_DISTINCT = 256
+
+
+@dataclass(frozen=True)
+class Statistics:
+    n_triples: int
+    n_ids: int
+    pred_count: dict[int, int]          # p -> #triples
+    pred_distinct_s: dict[int, int]     # p -> #distinct subjects
+    pred_distinct_o: dict[int, int]     # p -> #distinct objects
+    distinct_s: int
+    distinct_o: int
+    distinct_p: int
+    pred_obj_hist: dict[int, dict[int, int]]  # p -> {o -> count}, low-card preds
+
+    def atom_card(self, s_bound: bool, p: int | None, o_bound: bool,
+                  o_val: int | None = None) -> float:
+        """Estimated cardinality of one triple pattern (System-R style,
+        exact histogram for categorical predicates)."""
+        if p is not None:
+            base = float(self.pred_count.get(p, 0))
+            if base == 0.0:
+                return 0.0
+            if o_bound:
+                hist = self.pred_obj_hist.get(p)
+                if hist is not None and o_val is not None:
+                    base = float(hist.get(o_val, 0))
+                    if base == 0.0:
+                        return 0.0
+                else:
+                    base /= max(self.pred_distinct_o.get(p, 1), 1)
+            if s_bound:
+                base /= max(self.pred_distinct_s.get(p, 1), 1)
+            return max(base, 1e-3)
+        base = float(self.n_triples)
+        if s_bound:
+            base /= max(self.distinct_s, 1)
+        if o_bound:
+            base /= max(self.distinct_o, 1)
+        return max(base, 1e-3)
+
+
+class TripleStore:
+    def __init__(self, triples: np.ndarray, dictionary=None):
+        triples = np.asarray(triples, dtype=np.int32).reshape(-1, 3)
+        # dedupe
+        if len(triples):
+            triples = np.unique(triples, axis=0)
+        self.triples = triples
+        self.dictionary = dictionary
+        self._indexes: dict[str, np.ndarray] = {}
+        self._keys: dict[str, np.ndarray] = {}
+        for name, perm in _ORDERS.items():
+            proj = triples[:, perm]
+            order = np.lexsort((proj[:, 2], proj[:, 1], proj[:, 0]))
+            sorted_t = triples[order]
+            self._indexes[name] = sorted_t
+            self._keys[name] = _fuse_keys(sorted_t[:, perm[:2]].reshape(-1, 2))
+        self._stats: Statistics | None = None
+
+    def __len__(self) -> int:
+        return len(self.triples)
+
+    # ------------------------------------------------------------------
+    # access paths
+    # ------------------------------------------------------------------
+    def index(self, name: str) -> np.ndarray:
+        return self._indexes[name]
+
+    def scan(self, s: int | None, p: int | None, o: int | None) -> np.ndarray:
+        """All triples matching the (possibly unbound) pattern; (M,3)."""
+        # choose the index whose sort prefix covers the bound positions
+        if p is not None and o is not None:
+            idx, key = "pos", (p, o)
+        elif p is not None:
+            idx, key = "pos", (p,)
+        elif s is not None:
+            idx, key = "spo", (s,) if o is None else (s,)
+        elif o is not None:
+            idx, key = "osp", (o,)
+        else:
+            res = self._indexes["spo"]
+            return res
+        data = self._indexes[idx]
+        perm = _ORDERS[idx]
+        if len(key) == 2:
+            fused = self._keys[idx]
+            target = (np.uint64(key[0]) << np.uint64(32)) | np.uint64(key[1])
+            lo = np.searchsorted(fused, target, side="left")
+            hi = np.searchsorted(fused, target, side="right")
+        else:
+            col = data[:, perm[0]]
+            lo = np.searchsorted(col, key[0], side="left")
+            hi = np.searchsorted(col, key[0], side="right")
+        res = data[lo:hi]
+        # residual filters for positions not covered by the index prefix
+        for pos, val in (("s", s), ("p", p), ("o", o)):
+            if val is None:
+                continue
+            col_i = {"s": 0, "p": 1, "o": 2}[pos]
+            if col_i in (perm[0], perm[1])[: len(key)]:
+                continue
+            res = res[res[:, col_i] == val]
+        return res
+
+    # ------------------------------------------------------------------
+    def insert(self, new_triples: np.ndarray) -> "TripleStore":
+        """Functional insert (returns a new store); powers maintenance tests."""
+        merged = np.concatenate([self.triples, np.asarray(new_triples, np.int32).reshape(-1, 3)])
+        return TripleStore(merged, self.dictionary)
+
+    # ------------------------------------------------------------------
+    @property
+    def stats(self) -> Statistics:
+        if self._stats is None:
+            t = self.triples
+            preds, counts = np.unique(t[:, 1], return_counts=True) if len(t) else ([], [])
+            pc: dict[int, int] = {}
+            pds: dict[int, int] = {}
+            pdo: dict[int, int] = {}
+            hist: dict[int, dict[int, int]] = {}
+            for p, c in zip(np.asarray(preds).tolist(), np.asarray(counts).tolist()):
+                mask = t[:, 1] == p
+                pc[p] = int(c)
+                pds[p] = int(len(np.unique(t[mask, 0])))
+                objs, ocounts = np.unique(t[mask, 2], return_counts=True)
+                pdo[p] = int(len(objs))
+                if len(objs) <= _HIST_MAX_DISTINCT:
+                    hist[p] = {int(o): int(n) for o, n in zip(objs, ocounts)}
+            n_ids = int(t.max()) + 1 if len(t) else 0
+            self._stats = Statistics(
+                n_triples=len(t),
+                n_ids=n_ids,
+                pred_count=pc,
+                pred_distinct_s=pds,
+                pred_distinct_o=pdo,
+                distinct_s=int(len(np.unique(t[:, 0]))) if len(t) else 0,
+                distinct_o=int(len(np.unique(t[:, 2]))) if len(t) else 0,
+                distinct_p=int(len(pc)),
+                pred_obj_hist=hist,
+            )
+        return self._stats

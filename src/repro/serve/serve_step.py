@@ -1,0 +1,80 @@
+"""Serving: jitted decode step + a minimal batched-request engine.
+
+`make_serve_step` is what the dry-run lowers for decode_* / long_* cells:
+one new token against a KV (or recurrent-state) cache of `cache_len`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    temperature: float = 0.0  # 0 = greedy
+    cache_len: int = 4096
+
+
+def make_serve_step(model: Model, sc: ServeConfig):
+    """serve_step(params, cache, token, pos, key) -> (next_token, cache)."""
+
+    def step(params, cache, token, pos, key):
+        logits, cache = model.decode_step(params, token, pos, cache)
+        last = logits[:, -1, :].astype(jnp.float32)
+        if sc.temperature > 0.0:
+            nxt = jax.random.categorical(key, last / sc.temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(last, axis=-1)
+        return nxt[:, None].astype(jnp.int32), cache
+
+    return step
+
+
+def make_prefill(model: Model):
+    """prefill(params, tokens) -> logits (the inference-prefill workload)."""
+
+    def prefill(params, tokens, positions=None, enc_frames=None):
+        return model.forward(params, tokens=tokens, positions=positions,
+                             enc_frames=enc_frames)
+
+    return prefill
+
+
+class BatchedServer:
+    """Toy continuous-batching server: fixed batch of request slots, each
+    slot decodes independently; finished slots are refilled.  Exercises
+    the serving path end-to-end in examples/ and tests."""
+
+    def __init__(self, model: Model, params, sc: ServeConfig, batch: int,
+                 eos_id: int = 0, max_new: int = 16):
+        self.model = model
+        self.params = params
+        self.sc = sc
+        self.batch = batch
+        self.eos_id = eos_id
+        self.max_new = max_new
+        self.step_fn = jax.jit(make_serve_step(model, sc))
+        enc_len = 8 if model.cfg.encoder is not None else 0
+        self.cache = model.init_cache(batch, sc.cache_len, enc_len)
+        self.tokens = jnp.zeros((batch, 1), jnp.int32)
+        self.produced: list[list[int]] = [[] for _ in range(batch)]
+        self.done: list[list[int]] = []
+
+    def run(self, steps: int, key=None):
+        key = key if key is not None else jax.random.key(0)
+        for pos in range(steps):
+            key, sub = jax.random.split(key)
+            self.tokens, self.cache = self.step_fn(
+                self.params, self.cache, self.tokens, jnp.int32(pos), sub)
+            toks = np.asarray(self.tokens)[:, 0]
+            for i, t in enumerate(toks.tolist()):
+                self.produced[i].append(t)
+                if t == self.eos_id or len(self.produced[i]) >= self.max_new:
+                    self.done.append(self.produced[i])
+                    self.produced[i] = []  # slot refilled with a new request
+        return self.done

@@ -1,0 +1,141 @@
+"""Training step: CE loss, remat, microbatch gradient accumulation,
+mixed precision, logical-axis sharding.
+
+`make_train_step` builds the jitted SPMD program used by launch/train.py
+and by the dry-run (lowered against ShapeDtypeStructs).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import (DEFAULT_RULES, axis_ctx,
+                                        param_shardings, shard_act, spec_for)
+from repro.models.model import Model
+from repro.train.optimizer import (OptConfig, adamw_update,
+                                   clip_by_global_norm, init_opt_state)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = field(default_factory=OptConfig)
+    remat: str = "full"          # none | full
+    accum_steps: int = 1         # microbatch gradient accumulation
+    grad_dtype: Any = jnp.float32  # bf16 = compressed gradient reduction
+    z_loss: float = 0.0
+
+
+def cross_entropy(logits, labels, z_loss: float = 0.0):
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    loss = nll.mean()
+    if z_loss > 0.0:
+        zl = jnp.square(jax.scipy.special.logsumexp(
+            logits.astype(jnp.float32), axis=-1)).mean()
+        loss = loss + z_loss * zl
+    return loss
+
+
+def loss_fn(model: Model, params, batch, tc: TrainConfig):
+    kw = {}
+    if "positions" in batch:
+        kw["positions"] = batch["positions"]
+    if "enc_frames" in batch:
+        kw["enc_frames"] = batch["enc_frames"]
+    logits = model.forward(params, tokens=batch["tokens"], remat=tc.remat, **kw)
+    return cross_entropy(logits, batch["labels"], tc.z_loss)
+
+
+def make_train_step(model: Model, tc: TrainConfig, mesh=None,
+                    rules: dict | None = None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params": ..., "opt": {...}}.  When `mesh` is given, the
+    function applies logical-axis constraints inside the model and the
+    caller is expected to jit with matching in/out shardings.
+    """
+    rules = rules or DEFAULT_RULES
+
+    def step(state, batch):
+        ctx = axis_ctx(mesh, rules) if mesh is not None else _null_ctx()
+        with ctx:
+            params = state["params"]
+
+            if tc.accum_steps > 1:
+                def micro(carry, mb):
+                    loss_i, grads_i = jax.value_and_grad(
+                        lambda p: loss_fn(model, p, mb, tc))(params)
+                    grads_i = jax.tree.map(
+                        lambda g: g.astype(tc.grad_dtype), grads_i)
+                    acc_loss, acc_g = carry
+                    return (acc_loss + loss_i,
+                            jax.tree.map(jnp.add, acc_g, grads_i)), None
+
+                zero = (jnp.zeros((), jnp.float32),
+                        jax.tree.map(
+                            lambda p: jnp.zeros(p.shape, tc.grad_dtype), params))
+                mbs = jax.tree.map(
+                    lambda x: x.reshape((tc.accum_steps,
+                                         x.shape[0] // tc.accum_steps) + x.shape[1:]),
+                    batch)
+                (loss, grads), _ = jax.lax.scan(micro, zero, mbs)
+                loss = loss / tc.accum_steps
+                grads = jax.tree.map(lambda g: g / tc.accum_steps, grads)
+            else:
+                loss, grads = jax.value_and_grad(
+                    lambda p: loss_fn(model, p, batch, tc))(params)
+                grads = jax.tree.map(lambda g: g.astype(tc.grad_dtype), grads)
+
+            grads, gnorm = clip_by_global_norm(grads, tc.opt.clip_norm)
+            new_params, new_opt, lr = adamw_update(
+                params, grads, state["opt"], tc.opt)
+            metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+            return {"params": new_params, "opt": new_opt}, metrics
+
+    return step
+
+
+def init_train_state(model: Model, tc: TrainConfig, key, dtype=jnp.float32):
+    params = model.init(key, dtype)
+    return {"params": params, "opt": init_opt_state(params, tc.opt)}
+
+
+def train_state_shapes(model: Model, tc: TrainConfig, dtype=jnp.bfloat16):
+    """Dry-run path: the full train state as ShapeDtypeStructs."""
+    from repro.train.optimizer import opt_state_shapes
+
+    pshapes = model.param_shapes(dtype)
+    return {"params": pshapes, "opt": opt_state_shapes(pshapes, tc.opt)}
+
+
+def train_state_shardings(model: Model, tc: TrainConfig, mesh, rules=None):
+    rules = rules or DEFAULT_RULES
+    ps = param_shardings(model.template, rules, mesh)
+    return {"params": ps, "opt": {"m": ps, "v": ps,
+                                  "step": jax.sharding.NamedSharding(
+                                      mesh, jax.sharding.PartitionSpec())}}
+
+
+def batch_shardings(mesh, batch_tree, rules=None):
+    from jax.sharding import NamedSharding
+
+    rules = rules or DEFAULT_RULES
+
+    def for_leaf(x):
+        ndim = len(x.shape)
+        axes = ("batch",) + (None,) * (ndim - 1)
+        return NamedSharding(mesh, spec_for(axes, rules, mesh))
+
+    return jax.tree.map(for_leaf, batch_tree)
+
+
+class _null_ctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False

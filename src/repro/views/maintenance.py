@@ -1,0 +1,76 @@
+"""Incremental view maintenance (single-triple inserts).
+
+delta(V, t) = ∪_i  eval( V with atom_i unified against t )  over TT ∪ {t}
+
+The quality function only needs the *cost estimate*
+(core/quality.view_maintenance_cost); this module implements the actual
+maintenance so the estimate is validated against reality in tests.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.queries import CQ, Atom, Const, Term, Var
+from repro.query import ref_engine as R
+from repro.rdf.triples import TripleStore
+
+
+def _unify(atom: Atom, triple: tuple[int, int, int]) -> dict[Var, Const] | None:
+    mapping: dict[Var, Const] = {}
+    for t, val in zip(atom.terms(), triple):
+        if isinstance(t, Const):
+            if t.id != val:
+                return None
+        else:
+            if t in mapping and mapping[t].id != val:
+                return None
+            mapping[t] = Const(int(val))
+    return mapping
+
+
+def delta_rows(view_cq: CQ, new_store: TripleStore,
+               triple: tuple[int, int, int]) -> np.ndarray:
+    """Rows added to the view extent by inserting `triple` (the store
+    passed in must already contain it)."""
+    out: set[tuple[int, ...]] = set()
+    for i, atom in enumerate(view_cq.atoms):
+        mapping = _unify(atom, triple)
+        if mapping is None:
+            continue
+        rest = [a.substitute(mapping) for j, a in enumerate(view_cq.atoms) if j != i]
+        if not rest:
+            row = tuple(mapping[h].id for h in view_cq.head)
+            out.add(row)
+            continue
+        sub_head = tuple(
+            h for h in view_cq.head if h not in mapping
+        )
+        sub_cq = CQ(sub_head, tuple(rest), name="_delta")
+        rel = R.evaluate_cq(sub_cq, new_store)
+        col = {c: k for k, c in enumerate(rel.cols)}
+        for r in rel.rows.tolist():
+            row = tuple(
+                mapping[h].id if h in mapping else r[col[h.name]]
+                for h in view_cq.head
+            )
+            out.add(row)
+    if not out:
+        return np.zeros((0, len(view_cq.head)), np.int32)
+    return np.array(sorted(out), dtype=np.int32)
+
+
+def maintain(view_cq: CQ, old_extent: np.ndarray, store: TripleStore,
+             triple: tuple[int, int, int]) -> tuple[np.ndarray, TripleStore, int]:
+    """Insert `triple` into the store and maintain the extent.
+
+    Returns (new_extent, new_store, delta_size)."""
+    new_store = store.insert(np.array([triple], np.int32))
+    if len(new_store) == len(store):  # duplicate insert: no-op
+        return old_extent, new_store, 0
+    delta = delta_rows(view_cq, new_store, triple)
+    if len(delta) == 0:
+        return old_extent, new_store, 0
+    merged = np.unique(
+        np.concatenate([old_extent.reshape(-1, len(view_cq.head)), delta]), axis=0
+    )
+    return merged, new_store, int(len(merged) - len(old_extent))

@@ -1,0 +1,35 @@
+"""The CLI launchers run end-to-end (subprocess smoke)."""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    return subprocess.run([sys.executable, "-m"] + args, capture_output=True,
+                          text=True, env=env, cwd=ROOT, timeout=timeout)
+
+
+def test_tune_cli():
+    res = _run(["repro.launch.tune", "--universities", "1",
+                "--strategy", "greedy", "--max-states", "100", "--verify"])
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "verification: PASSED" in res.stdout
+
+
+def test_train_cli_with_checkpoint_resume(tmp_path):
+    ckpt = str(tmp_path / "ck")
+    res = _run(["repro.launch.train", "--arch", "whisper-base", "--smoke",
+                "--steps", "6", "--batch", "2", "--seq", "16",
+                "--data", "synthetic", "--ckpt", ckpt, "--save-every", "2"])
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "done" in res.stdout
+    # resume continues from the saved step
+    res2 = _run(["repro.launch.train", "--arch", "whisper-base", "--smoke",
+                 "--steps", "8", "--batch", "2", "--seq", "16",
+                 "--data", "synthetic", "--ckpt", ckpt, "--save-every", "2"])
+    assert res2.returncode == 0, res2.stderr[-2000:]
+    assert "resumed from step 6" in res2.stdout

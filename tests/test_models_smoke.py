@@ -1,0 +1,150 @@
+"""Per-architecture smoke tests: reduced configs, one forward + one train
+step + decode steps on CPU; asserts shapes and finiteness.
+
+Also checks decode-vs-forward consistency for the cached attention path
+(prefill-free: step-by-step decode must match the parallel forward).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config, list_archs
+from repro.models.model import build_model
+
+ARCHS = list_archs()
+
+
+def _inputs(cfg, batch=2, seq=16, key=0):
+    rng = np.random.default_rng(key)
+    kw = {}
+    if cfg.encoder is not None:
+        kw["enc_frames"] = jnp.asarray(
+            rng.normal(size=(batch, 8, cfg.encoder.d_input)).astype(np.float32))
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, size=(batch, seq)).astype(np.int32))
+    if cfg.mrope:
+        pos = np.broadcast_to(np.arange(seq, dtype=np.int32)[None, :, None],
+                              (batch, seq, 3)).copy()
+        # make h/w coordinates diverge for a few "image" positions
+        pos[:, : seq // 2, 1] += 3
+        pos[:, : seq // 2, 2] += 5
+        kw["positions"] = jnp.asarray(pos)
+    return tokens, kw
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finiteness(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    tokens, kw = _inputs(cfg)
+    logits = jax.jit(lambda p, t: model.forward(p, tokens=t, **kw))(params, tokens)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step_reduces_loss_finite_grads(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(1))
+    tokens, kw = _inputs(cfg, batch=2, seq=16, key=1)
+    labels = jnp.roll(tokens, -1, axis=1)
+
+    def loss_fn(p):
+        logits = model.forward(p, tokens=tokens, **kw)
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)
+        return nll.mean()
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert bool(jnp.isfinite(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in flat), f"{arch}: bad grads"
+    # one SGD step must change the loss
+    params2 = jax.tree.map(lambda p, g: p - 0.1 * g, params, grads)
+    loss2 = jax.jit(loss_fn)(params2)
+    assert bool(jnp.isfinite(loss2))
+    assert float(loss2) != float(loss)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_steps_finite(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(2))
+    B, cache_len = 2, 32
+    enc_len = 8 if cfg.encoder is not None else 0
+    cache = model.init_cache(B, cache_len, enc_len)
+    step = jax.jit(model.decode_step)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    for pos in range(3):
+        logits, cache = step(params, tok, jnp.int32(pos), cache)
+        assert logits.shape == (B, 1, cfg.vocab)
+        assert bool(jnp.isfinite(logits).all()), f"{arch}: step {pos}"
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-32b", "gemma3-12b", "rwkv6-3b",
+                                  "zamba2-1.2b", "granite-moe-1b-a400m"])
+def test_decode_matches_forward(arch):
+    """Teacher-forced step-by-step decode == parallel forward logits."""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(3))
+    B, S = 1, 8
+    rng = np.random.default_rng(5)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, size=(B, S)).astype(np.int32))
+    ref = model.forward(params, tokens=tokens)
+
+    cache = model.init_cache(B, cache_len=S)
+    step = jax.jit(model.decode_step)
+    outs = []
+    for t in range(S):
+        logits, cache = step(params, tokens[:, t: t + 1], jnp.int32(t), cache)
+        outs.append(logits[:, 0])
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_param_counts_match_templates():
+    """Analytic param_count tracks the template within 12% (sanity of the
+    roofline MODEL_FLOPS term)."""
+    from repro.models.params import count_params
+
+    for arch in ARCHS:
+        cfg = get_smoke_config(arch)
+        model = build_model(cfg)
+        tpl = count_params(model.template)
+        analytic = cfg.param_count()
+        assert abs(tpl - analytic) / tpl < 0.12, (
+            f"{arch}: template={tpl} analytic={analytic}")
+
+
+def test_full_configs_construct():
+    """Full published configs build templates (no allocation) with sane
+    parameter counts."""
+    from repro.configs import get_config
+    from repro.models.params import count_params
+
+    expected_b = {
+        "granite-moe-1b-a400m": (0.8, 2.0),
+        "llama4-maverick-400b-a17b": (300, 800),
+        "qwen2.5-32b": (28, 40),
+        "deepseek-67b": (60, 75),
+        "gemma3-12b": (9, 16),
+        # assignment config w/ SwiGLU FFN: 3 matrices (published granite
+        # uses a 2-matrix GPT-BigCode FFN, hence "20b")
+        "granite-20b": (18, 30),
+        "rwkv6-3b": (2.5, 5),
+        "qwen2-vl-2b": (1.2, 2.5),
+        "whisper-base": (0.05, 0.12),
+        "zamba2-1.2b": (0.9, 1.8),
+    }
+    for arch, (lo, hi) in expected_b.items():
+        cfg = get_config(arch)
+        model = build_model(cfg)
+        n = count_params(model.template) / 1e9
+        assert lo <= n <= hi, f"{arch}: {n:.2f}B params out of range [{lo},{hi}]"

@@ -1,0 +1,49 @@
+"""Prefill -> decode cache handoff: prefill S0 tokens, then teacher-forced
+decode must reproduce the parallel forward's logits at every continued
+position — for every cache family (full KV, rolling-window KV, SSM state,
+WKV state, shared-attn hybrid, enc-dec cross-attn)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models.model import build_model
+
+ARCHS = ["qwen2.5-32b", "gemma3-12b", "rwkv6-3b", "zamba2-1.2b",
+         "granite-moe-1b-a400m", "whisper-base", "qwen2-vl-2b"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_then_decode_matches_forward(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, S0, S1 = 1, 8, 12  # prefill 8, decode 4 more
+    if cfg.ssm is not None:
+        # full-sequence reference + prefill both need chunk-divisible seqs
+        S0 = max(S0, cfg.ssm.chunk)
+        S1 = 2 * S0
+    cache_len = S1 + 4
+    rng = np.random.default_rng(7)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, size=(B, S1)).astype(np.int32))
+    kw = {}
+    if cfg.encoder is not None:
+        kw["enc_frames"] = jnp.asarray(
+            rng.normal(size=(B, 8, cfg.encoder.d_input)).astype(np.float32))
+
+    ref = model.forward(params, tokens=tokens, **kw)
+
+    logits0, cache = model.prefill_with_cache(
+        params, tokens=tokens[:, :S0], cache_len=cache_len, **kw)
+    np.testing.assert_allclose(np.asarray(logits0), np.asarray(ref[:, :S0]),
+                               rtol=3e-2, atol=3e-2)
+
+    step = jax.jit(model.decode_step)
+    for t in range(S0, S1):
+        logits, cache = step(params, tokens[:, t: t + 1], jnp.int32(t), cache)
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0]), np.asarray(ref[:, t]),
+            rtol=3e-2, atol=3e-2,
+            err_msg=f"{arch}: divergence at position {t}")

@@ -1,0 +1,149 @@
+"""JAX padded engine vs numpy oracle: identical answers on random data."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.queries import CQ, Atom, Const, Var
+from repro.query import engine as E
+from repro.query import ref_engine as R
+from repro.query.plan import EquiJoin, Filter, Project, TTScan, ViewRef, plan_for_cq
+from repro.rdf.generator import generate, lubm_workload
+from repro.rdf.triples import TripleStore
+
+
+@pytest.fixture(scope="module")
+def uni():
+    return generate(n_universities=1, seed=0)
+
+
+def _measured_info(rel):
+    from repro.query.cost import RelInfo
+    rows = float(len(rel.rows))
+    distinct = {
+        c: float(len(np.unique(rel.rows[:, i]))) if len(rel.rows) else 1.0
+        for i, c in enumerate(rel.cols)
+    }
+    return RelInfo(max(rows, 1e-3), distinct)
+
+
+def _run_plan(plan, store, views_np=None, view_cards=None, use_pallas=False):
+    views_np = views_np or {}
+    view_cards = view_cards or {vid: _measured_info(rel) for vid, rel in views_np.items()}
+    fn = E.build_executor(plan, store.stats, view_cards, use_pallas=use_pallas)
+    tt = E.tt_device_indexes(store)
+    views = {
+        vid: E.make_prel(rel.rows, cap=max(128, 1 << int(np.ceil(np.log2(max(len(rel.rows), 1) + 1)))))
+        for vid, rel in views_np.items()
+    }
+    out = jax.jit(lambda tt, views: fn(tt, views))(tt, views)
+    assert not bool(out.overflow), "capacity overflow in test plan"
+    return E.to_numpy(out), fn.out_columns
+
+
+def _oracle(plan, store, views_np=None):
+    rel = R.execute(plan, store, views_np or {})
+    return rel
+
+
+def assert_same(plan, store, views_np=None, view_cards=None, use_pallas=False):
+    got_rows, got_cols = _run_plan(plan, store, views_np, view_cards, use_pallas)
+    want = _oracle(plan, store, views_np)
+    assert tuple(got_cols) == tuple(want.cols)
+    got_set = {tuple(r) for r in got_rows.tolist()}
+    want_set = want.as_set()
+    assert got_set == want_set, (
+        f"mismatch: extra={list(got_set - want_set)[:5]}, missing={list(want_set - got_set)[:5]}"
+    )
+
+
+def test_scan_patterns(uni):
+    d = uni.dictionary
+    t = Const(uni.type_id)
+    student = Const(d.lookup("ub:GraduateStudent"))
+    takes = Const(d.lookup("ub:takesCourse"))
+    x, y = Var("x"), Var("y")
+    for atom in [
+        Atom(x, t, student),
+        Atom(x, takes, y),
+        Atom(x, Var("p"), y),
+    ]:
+        assert_same(TTScan(atom), uni.store)
+
+
+def test_self_join_atom():
+    # pattern (?x ?p ?x): rows with s == o
+    t = np.array([[1, 2, 1], [1, 2, 3], [4, 5, 4]], np.int32)
+    ts = TripleStore(t)
+    plan = TTScan(Atom(Var("x"), Var("p"), Var("x")))
+    assert_same(plan, ts)
+
+
+def test_filter_and_project(uni):
+    d = uni.dictionary
+    takes = Const(d.lookup("ub:takesCourse"))
+    x, y = Var("x"), Var("y")
+    scan = TTScan(Atom(x, takes, y))
+    some_course = int(uni.store.scan(None, takes.id, None)[0, 2])
+    assert_same(Filter(scan, "y", some_course), uni.store)
+    assert_same(Project(Filter(scan, "y", some_course), ("x",)), uni.store)
+
+
+def test_join_two_atoms(uni):
+    d = uni.dictionary
+    t = Const(uni.type_id)
+    grad = Const(d.lookup("ub:GraduateStudent"))
+    takes = Const(d.lookup("ub:takesCourse"))
+    x, y = Var("x"), Var("y")
+    plan = EquiJoin(
+        TTScan(Atom(x, t, grad)), TTScan(Atom(x, takes, y)), (("x", "x"),)
+    )
+    assert_same(plan, uni.store)
+
+
+def test_multi_column_join(uni):
+    # join on two shared vars: (x advisor y)(x memberOf z) vs (x advisor y)(y worksFor z)
+    d = uni.dictionary
+    adv = Const(d.lookup("ub:advisor"))
+    works = Const(d.lookup("ub:worksFor"))
+    member = Const(d.lookup("ub:memberOf"))
+    x, y, z = Var("x"), Var("y"), Var("z")
+    left = EquiJoin(TTScan(Atom(x, adv, y)), TTScan(Atom(y, works, z)), (("y", "y"),))
+    right = EquiJoin(TTScan(Atom(x, member, z)), TTScan(Atom(x, adv, y)), (("x", "x"),))
+    plan = EquiJoin(left, right, (("x", "x"), ("y", "y"), ("z", "z")))
+    assert_same(plan, uni.store)
+
+
+def test_full_workload_plans(uni):
+    for q in lubm_workload(uni.dictionary):
+        assert_same(plan_for_cq(q), uni.store)
+
+
+def test_view_ref_and_rewriting_shape(uni):
+    d = uni.dictionary
+    takes = Const(d.lookup("ub:takesCourse"))
+    x, y = Var("x"), Var("y")
+    cq = CQ((x, y), (Atom(x, takes, y),), name="v0")
+    ext = R.evaluate_cq(cq, uni.store)
+    views_np = {0: ext}
+    plan = Project(ViewRef(0, ("x", "y")), ("x",))
+    assert_same(plan, uni.store, views_np)
+
+
+def test_overflow_flag():
+    t = np.stack([np.zeros(600, np.int32), np.ones(600, np.int32),
+                  np.arange(600, dtype=np.int32)], axis=1)
+    ts = TripleStore(t)
+    plan = TTScan(Atom(Var("x"), Const(1), Var("y")))
+    fn = E.build_executor(plan, ts.stats, {}, cap_override=lambda n, r: 128)
+    out = fn(E.tt_device_indexes(ts), {})
+    assert bool(out.overflow)
+    assert int(out.n) == 128
+
+
+def test_empty_results(uni):
+    d = uni.dictionary
+    t = Const(uni.type_id)
+    plan = TTScan(Atom(Var("x"), t, Const(d.encode("ub:NoSuchClass"))))
+    got, _ = _run_plan(plan, uni.store)
+    assert len(got) == 0

@@ -1,0 +1,121 @@
+"""Tests for the RDF substrate: dictionary, triple store, schema, parsers."""
+import numpy as np
+import pytest
+
+from repro.rdf.dictionary import Dictionary, RDF_TYPE
+from repro.rdf.generator import generate, lubm_workload
+from repro.rdf.parser import parse_ntriples, parse_sparql
+from repro.rdf.schema import RDFSchema
+from repro.rdf.triples import TripleStore
+
+
+def test_dictionary_roundtrip(tmp_path):
+    d = Dictionary()
+    ids = [d.encode(s) for s in ["a", "b", "a", "c"]]
+    assert ids == [0, 1, 0, 2]
+    assert d.decode(1) == "b"
+    assert len(d) == 3
+    p = tmp_path / "dict.json"
+    d.save(str(p))
+    d2 = Dictionary.load(str(p))
+    assert d2.lookup("c") == 2
+
+
+def test_triple_store_dedupe_and_scan():
+    t = np.array([[0, 1, 2], [0, 1, 2], [0, 1, 3], [4, 1, 2], [4, 5, 6]], np.int32)
+    ts = TripleStore(t)
+    assert len(ts) == 4
+    assert len(ts.scan(0, 1, None)) == 2
+    assert len(ts.scan(None, 1, 2)) == 2
+    assert len(ts.scan(None, None, None)) == 4
+    assert len(ts.scan(4, None, None)) == 2
+    assert len(ts.scan(0, 1, 3)) == 1
+    assert len(ts.scan(9, None, None)) == 0
+
+
+def test_triple_store_indexes_sorted():
+    rng = np.random.default_rng(0)
+    t = rng.integers(0, 50, size=(300, 3)).astype(np.int32)
+    ts = TripleStore(t)
+    for name, cols in [("spo", (0, 1, 2)), ("pos", (1, 2, 0)), ("osp", (2, 0, 1))]:
+        data = ts.index(name)[:, cols]
+        keys = data[:, 0].astype(np.int64) * 10**6 + data[:, 1] * 10**3 + data[:, 2]
+        assert np.all(np.diff(keys) >= 0), name
+
+
+def test_scan_matches_bruteforce():
+    rng = np.random.default_rng(1)
+    t = rng.integers(0, 20, size=(500, 3)).astype(np.int32)
+    ts = TripleStore(t)
+    uniq = ts.triples
+    for s, p, o in [(3, None, None), (None, 7, None), (None, None, 11),
+                    (3, 7, None), (None, 7, 11), (3, None, 11), (3, 7, 11)]:
+        got = ts.scan(s, p, o)
+        mask = np.ones(len(uniq), bool)
+        if s is not None:
+            mask &= uniq[:, 0] == s
+        if p is not None:
+            mask &= uniq[:, 1] == p
+        if o is not None:
+            mask &= uniq[:, 2] == o
+        want = uniq[mask]
+        assert {tuple(r) for r in got.tolist()} == {tuple(r) for r in want.tolist()}
+
+
+def test_schema_closure():
+    sch = RDFSchema()
+    sch.add_subclass(1, 2)
+    sch.add_subclass(2, 3)
+    sch.add_subclass(4, 3)
+    assert sch.superclasses(1) == {1, 2, 3}
+    assert sch.subclasses(3) == {1, 2, 3, 4}
+    sch.add_subprop(10, 11)
+    assert sch.subproperties(11) == {10, 11}
+    sch.set_domain(10, 2)
+    assert sch.props_with_domain_under(3) == {10}
+    assert sch.props_with_domain_under(1) == set()
+
+
+def test_schema_saturation():
+    sch = RDFSchema()
+    TYPE = 0
+    sch.add_subclass(1, 2)
+    sch.set_domain(5, 1)
+    triples = np.array([[100, 5, 200]], np.int32)
+    sat = sch.saturate_instance(triples, TYPE)
+    got = {tuple(r) for r in sat.tolist()}
+    assert (100, TYPE, 1) in got
+    assert (100, TYPE, 2) in got  # via subclass of inferred type
+
+
+def test_generator_and_workload():
+    uni = generate(n_universities=1, seed=0)
+    assert len(uni.store) > 100
+    qs = lubm_workload(uni.dictionary)
+    assert len(qs) == 6
+    names = {q.name for q in qs}
+    assert names == {"q1", "q2", "q3", "q4", "q5", "q6"}
+    for q in qs:
+        assert q.is_connected()
+        assert q.weight > 0
+
+
+def test_sparql_parser():
+    d = Dictionary()
+    q = parse_sparql(
+        "SELECT ?x ?y WHERE { ?x rdf:type ub:Student . ?x ub:takesCourse ?y }",
+        d, name="p1",
+    )
+    assert len(q.atoms) == 2
+    assert [h.name for h in q.head] == ["x", "y"]
+    assert q.atoms[0].p.id == d.lookup(RDF_TYPE)
+
+    with pytest.raises(Exception):
+        parse_sparql("SELECT ?x WHERE { ?x ?p }", d)
+
+
+def test_ntriples_parser():
+    d = Dictionary()
+    arr = parse_ntriples("<a> <p> <b> .\n<b> <p> \"lit\" .", d)
+    assert arr.shape == (2, 3)
+    assert arr[0, 1] == arr[1, 1]

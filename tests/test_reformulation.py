@@ -1,0 +1,96 @@
+"""RDFS reformulation: completeness w.r.t. instance saturation (claim 4)."""
+import numpy as np
+import pytest
+
+from repro.core.queries import CQ, Atom, Const, Var
+from repro.core.reformulation import reformulate, reformulate_workload
+from repro.query import ref_engine as R
+from repro.rdf.generator import generate, lubm_workload
+from repro.rdf.triples import TripleStore
+
+
+@pytest.fixture(scope="module")
+def uni():
+    return generate(n_universities=1, seed=0, dept_per_univ=1,
+                    prof_per_dept=4, stud_per_dept=10, course_per_dept=5)
+
+
+def saturated_store(uni):
+    sat = uni.schema.saturate_instance(uni.store.triples, uni.type_id)
+    return TripleStore(sat, uni.dictionary)
+
+
+def test_type_query_reformulation_complete(uni):
+    """eval(reformulated, raw) == eval(original, saturated)"""
+    d = uni.dictionary
+    x = Var("x")
+    q = CQ((x,), (Atom(x, Const(uni.type_id), Const(d.lookup("ub:Student"))),),
+           name="students")
+    members = reformulate(q, uni.schema, uni.type_id)
+    assert len(members) > 1  # subclasses + domain properties fired
+    got = R.evaluate_ucq(members, uni.store)
+    want = R.evaluate_cq(q, saturated_store(uni)).as_set()
+    assert got == want
+    assert len(want) > 0
+
+
+def test_subproperty_reformulation_complete(uni):
+    d = uni.dictionary
+    x, y = Var("x"), Var("y")
+    q = CQ((x, y), (Atom(x, Const(d.lookup("ub:worksFor")), y),), name="wf")
+    members = reformulate(q, uni.schema, uni.type_id)
+    # headOf is a subproperty of worksFor
+    assert len(members) == 2
+    got = R.evaluate_ucq(members, uni.store)
+    want = R.evaluate_cq(q, saturated_store(uni)).as_set()
+    assert got == want
+
+
+def test_faculty_query_needs_reasoning(uni):
+    """Plain evaluation misses answers the schema entails (the paper's
+    motivation for reformulation)."""
+    d = uni.dictionary
+    x, y = Var("x"), Var("y")
+    q = CQ((x, y), (
+        Atom(x, Const(uni.type_id), Const(d.lookup("ub:Faculty"))),
+        Atom(x, Const(d.lookup("ub:worksFor")), y),
+    ), name="q4")
+    plain = R.evaluate_cq(q, uni.store).as_set()
+    members = reformulate(q, uni.schema, uni.type_id)
+    got = R.evaluate_ucq(members, uni.store)
+    want = R.evaluate_cq(q, saturated_store(uni)).as_set()
+    assert plain == set()      # nothing is directly typed Faculty
+    assert got == want and len(got) > 0
+
+
+def test_whole_workload_reformulation_complete(uni):
+    workload = lubm_workload(uni.dictionary)
+    members, groups = reformulate_workload(workload, uni.schema, uni.type_id)
+    sat = saturated_store(uni)
+    for q in workload:
+        got = set()
+        member_by_name = {m.name: m for m in members}
+        for name in groups[q.name]:
+            got |= R.evaluate_cq(member_by_name[name], uni.store).as_set()
+        want = R.evaluate_cq(q, sat).as_set()
+        assert got == want, q.name
+
+
+def test_reformulation_cap():
+    from repro.rdf.dictionary import Dictionary
+    from repro.rdf.schema import RDFSchema
+
+    d = Dictionary()
+    type_id = d.encode("rdf:type")
+    sch = RDFSchema()
+    base = d.encode("C0")
+    for i in range(1, 40):
+        sch.add_subclass(d.encode(f"C{i}"), base)
+    x, y, z = Var("x"), Var("y"), Var("z")
+    q = CQ((x,), (
+        Atom(x, Const(type_id), Const(base)),
+        Atom(y, Const(type_id), Const(base)),
+        Atom(z, Const(type_id), Const(base)),
+    ), name="big")
+    with pytest.raises(ValueError, match="cap"):
+        reformulate(q, sch, type_id, max_reformulations=100)

@@ -1,0 +1,80 @@
+"""Search strategies + quality function behaviour (paper claims 2/3/5)."""
+import pytest
+
+from repro.core.quality import QualityWeights, quality
+from repro.core.search import SearchConfig, search
+from repro.core.state import initial_state
+from repro.rdf.generator import generate, lubm_workload
+
+
+@pytest.fixture(scope="module")
+def uni():
+    return generate(n_universities=1, seed=0, dept_per_univ=2,
+                    prof_per_dept=4, stud_per_dept=15, course_per_dept=6)
+
+
+@pytest.fixture(scope="module")
+def workload(uni):
+    return lubm_workload(uni.dictionary)
+
+
+def test_initial_state_best_exec_cost(uni, workload):
+    """Paper: initial state = materialize workload = best execution time."""
+    st0 = initial_state(workload)
+    q0 = quality(st0, uni.store.stats)
+    cfg = SearchConfig(strategy="best_first", max_states=300)
+    res = search(st0, uni.store.stats, cfg)
+    assert res.best_quality.exec_cost >= q0.exec_cost - 1e-9 or \
+        res.best_quality.exec_cost / max(q0.exec_cost, 1e-9) > 0.99
+
+
+def test_search_never_worse_than_initial(uni, workload):
+    st0 = initial_state(workload)
+    q0 = quality(st0, uni.store.stats)
+    for strat in ["greedy", "beam", "best_first", "anneal", "exhaustive_dfs"]:
+        cfg = SearchConfig(strategy=strat, max_states=200, max_seconds=20)
+        res = search(st0, uni.store.stats, cfg)
+        assert res.best_quality.total <= q0.total + 1e-9, strat
+
+
+def test_heuristics_explore_fewer_states(uni, workload):
+    """Paper claim: heuristics significantly prune the search space."""
+    st0 = initial_state(workload[:3])
+    stats = uni.store.stats
+    full = search(st0, stats, SearchConfig(strategy="best_first",
+                                           max_states=1500, max_seconds=60))
+    greedy = search(st0, stats, SearchConfig(strategy="greedy",
+                                             max_states=1500, max_seconds=60))
+    assert greedy.explored < full.explored
+    # bounded quality loss (greedy's local optimum is within 2x here)
+    assert greedy.best_quality.total <= 2.0 * full.best_quality.total + 1e-9
+
+
+def test_weights_steer_choice(uni, workload):
+    """Paper: tuning w_exec/w_space steers the selected configuration."""
+    st0 = initial_state(workload)
+    stats = uni.store.stats
+    exec_heavy = search(st0, stats, SearchConfig(
+        strategy="greedy", max_states=500,
+        weights=QualityWeights(w_exec=100.0, w_maint=0.0, w_space=1e-6)))
+    space_heavy = search(st0, stats, SearchConfig(
+        strategy="greedy", max_states=500,
+        weights=QualityWeights(w_exec=1e-6, w_maint=0.0, w_space=100.0)))
+    # space-heavy search must give up storage relative to exec-heavy
+    assert space_heavy.best_quality.space_bytes <= exec_heavy.best_quality.space_bytes
+    assert exec_heavy.best_quality.exec_cost <= space_heavy.best_quality.exec_cost
+
+
+def test_search_budget_respected(uni, workload):
+    st0 = initial_state(workload)
+    res = search(st0, uni.store.stats,
+                 SearchConfig(strategy="exhaustive_dfs", max_states=50))
+    assert res.explored <= 51
+
+
+def test_search_log_monotone(uni, workload):
+    st0 = initial_state(workload)
+    res = search(st0, uni.store.stats,
+                 SearchConfig(strategy="best_first", max_states=300))
+    totals = [e["total"] for e in res.log]
+    assert totals == sorted(totals, reverse=True)

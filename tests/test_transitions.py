@@ -1,0 +1,146 @@
+"""Transition correctness: the state invariant (rewritings answer the
+workload exactly) must hold after any sequence of transitions.
+
+Includes a hypothesis property test driving random transition paths.
+"""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.queries import CQ, Atom, Const, Var
+from repro.core.state import initial_state
+from repro.core.transitions import (apply_fusion, apply_join_cut,
+                                    apply_selection_cut, fusion_candidates,
+                                    is_fully_relaxed, join_cut_candidates,
+                                    selection_cut_candidates, successors)
+from repro.query import ref_engine as R
+from repro.rdf.generator import generate, lubm_workload
+
+
+@pytest.fixture(scope="module")
+def uni():
+    return generate(n_universities=1, seed=0)
+
+
+@pytest.fixture(scope="module")
+def workload(uni):
+    return lubm_workload(uni.dictionary)
+
+
+def check_invariant(state, store):
+    """Materialize views (oracle) and check every rewriting answers its query."""
+    extents = {
+        vid: R.evaluate_cq(v.cq, store) for vid, v in state.views.items()
+    }
+    for q in state.queries:
+        got = R.execute(state.rewritings[q.name], store, extents).as_set()
+        want = R.evaluate_cq(q, store).as_set()
+        assert got == want, (
+            f"{q.name} broken after {state.path}: "
+            f"extra={list(got - want)[:3]} missing={list(want - got)[:3]}"
+        )
+
+
+def test_initial_state_invariant(uni, workload):
+    st0 = initial_state(workload)
+    assert len(st0.views) == len(workload)
+    check_invariant(st0, uni.store)
+
+
+def test_selection_cut(uni, workload):
+    st0 = initial_state(workload)
+    cands = list(selection_cut_candidates(st0))
+    assert cands, "workload has constants to cut"
+    for cand in cands:
+        st1 = apply_selection_cut(st0, *cand)
+        check_invariant(st1, uni.store)
+        # the cut view got strictly fewer constants
+        assert st1.key() != st0.key()
+
+
+def test_join_cut(uni, workload):
+    st0 = initial_state(workload)
+    cands = list(join_cut_candidates(st0))
+    assert cands, "workload has joins to cut"
+    for cand in cands[:10]:
+        st1 = apply_join_cut(st0, *cand)
+        check_invariant(st1, uni.store)
+
+
+def test_fusion_after_relaxation(uni):
+    d = uni.dictionary
+    t = Const(uni.type_id)
+    takes = Const(d.lookup("ub:takesCourse"))
+    grad = Const(d.lookup("ub:GraduateStudent"))
+    under = Const(d.lookup("ub:UndergraduateStudent"))
+    x, y = Var("x"), Var("y")
+    q_a = CQ((x, y), (Atom(x, t, grad), Atom(x, takes, y)), name="qa")
+    q_b = CQ((x, y), (Atom(x, t, under), Atom(x, takes, y)), name="qb")
+    st0 = initial_state([q_a, q_b])
+    assert not list(fusion_candidates(st0))
+    # cut the differing constants -> views become isomorphic -> fusion fires
+    st1 = st0
+    for vid, ai, pos in list(selection_cut_candidates(st1)):
+        if vid in st1.views:
+            st1 = apply_selection_cut(st1, vid, ai, pos)
+    # re-enumerate on the new state (ids changed)
+    while True:
+        cands = list(selection_cut_candidates(st1))
+        if not cands:
+            break
+        st1 = apply_selection_cut(st1, *cands[0])
+    fus = list(fusion_candidates(st1))
+    assert fus, "fully-relaxed identical views must be fusable"
+    st2 = apply_fusion(st1, *fus[0])
+    assert len(st2.views) < len(st1.views)
+    check_invariant(st2, uni.store)
+
+
+def test_fusion_identical_queries(uni, workload):
+    q1 = workload[0]
+    q1_dup = CQ(q1.head, q1.atoms, name="q1dup", weight=2.0)
+    st0 = initial_state([q1, q1_dup])
+    fus = list(fusion_candidates(st0))
+    assert fus
+    st1 = apply_fusion(st0, *fus[0])
+    assert len(st1.views) == 1
+    check_invariant(st1, uni.store)
+
+
+def test_fully_relaxed_detection():
+    x, y, p = Var("x"), Var("y"), Var("p")
+    q = CQ((x, y), (Atom(x, p, y),), name="q")
+    st0 = initial_state([q])
+    assert is_fully_relaxed(st0)
+    q2 = CQ((x, y), (Atom(x, Const(5), y),), name="q2")
+    assert not is_fully_relaxed(initial_state([q2]))
+
+
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(seed=st.integers(0, 10_000), steps=st.integers(1, 6))
+def test_random_transition_paths_preserve_answers(seed, steps):
+    """PROPERTY: any transition path preserves workload answers."""
+    rng = np.random.default_rng(seed)
+    uni = generate(n_universities=1, seed=1, dept_per_univ=1,
+                   prof_per_dept=3, stud_per_dept=8, course_per_dept=4)
+    workload = lubm_workload(uni.dictionary)[:4]
+    state = initial_state(workload)
+    for _ in range(steps):
+        succ = list(successors(state))
+        if not succ:
+            break
+        state = succ[int(rng.integers(0, len(succ)))]
+    check_invariant(state, uni.store)
+
+
+def test_transition_paths_with_predicate_cuts(uni, workload):
+    state = initial_state(workload[:2])
+    rng = np.random.default_rng(7)
+    for _ in range(4):
+        succ = list(successors(state, allow_predicate_cut=True))
+        if not succ:
+            break
+        state = succ[int(rng.integers(0, len(succ)))]
+    check_invariant(state, uni.store)

@@ -1,6 +1,8 @@
 """Shared timing utilities for the benchmark harness."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 
@@ -17,3 +19,21 @@ def emit(name: str, us: float, derived: str = "") -> str:
     line = f"{name},{us:.1f},{derived}"
     print(line)
     return line
+
+
+def quick_mode() -> bool:
+    """CI smoke mode: shrink datasets/iterations (set REPRO_BENCH_QUICK=1)."""
+    return os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+
+
+def write_bench_json(suite: str, metrics: dict, out_dir: str | None = None) -> str:
+    """Standard benchmark artifact: BENCH_<suite>.json with a flat
+    metrics dict (numbers or strings); returns the path written."""
+    out_dir = out_dir or os.environ.get("REPRO_BENCH_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{suite}.json")
+    with open(path, "w") as f:
+        json.dump({"suite": suite, "metrics": metrics}, f, indent=2,
+                  sort_keys=True)
+    print(f"# wrote {path}")
+    return path

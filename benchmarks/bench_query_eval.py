@@ -1,27 +1,45 @@
-"""Paper demo finale: per-query latency answered from the triple table vs
-from the wizard's materialized views (the performance benefit the demo
-shows attendees).  JAX engine both ways; µs per query."""
+"""Paper demo finale + workload-compilation A/B.
+
+Part 1 (the demo's performance claim): per-query latency answered from
+the triple table vs from the wizard's materialized views.
+
+Part 2 (workload-level compilation): the per-query jitted path — one
+XLA program per workload member — vs the fused shared-subplan executor
+— ONE program for the entire workload (query/dag.py + workload.py).
+Reports compile count, compile time, per-workload latency, and the
+DAG's shared-node hit rate; the speedup lands in BENCH_query_eval.json.
+"""
 from __future__ import annotations
+
+import time
 
 import jax
 
-from benchmarks.bench_common import emit, time_us
+from benchmarks.bench_common import (emit, quick_mode, time_us,
+                                     write_bench_json)
 from repro.core.search import SearchConfig
 from repro.core.wizard import WizardConfig, tune
 from repro.query import engine as E
+from repro.query.dag import build_dag
 from repro.query.plan import plan_for_cq
+from repro.query.workload import WorkloadExecutor
 from repro.rdf.generator import generate, lubm_workload
 
 
 def main(lines: list[str]) -> None:
-    uni = generate(n_universities=4, seed=0)
+    quick = quick_mode()
+    uni = generate(n_universities=1 if quick else 4, seed=0)
     workload = lubm_workload(uni.dictionary)
     rep = tune(uni.store, workload, uni.schema, uni.type_id,
                WizardConfig(search=SearchConfig(strategy="greedy",
-                                                max_states=300)))
+                                                max_states=60 if quick
+                                                else 300)))
     ex = rep.executor
     tt = E.tt_device_indexes(uni.store)
 
+    # ------------------------------------------------------------------
+    # part 1: TT vs materialized views, per query group
+    # ------------------------------------------------------------------
     speedups = []
     for q in workload:
         # baseline: every reformulation member evaluated over the TT
@@ -53,3 +71,72 @@ def main(lines: list[str]) -> None:
         geo *= s
     geo **= 1.0 / len(speedups)
     lines.append(emit("query_eval.geomean_speedup", 0.0, f"{geo:.2f}x"))
+
+    # ------------------------------------------------------------------
+    # part 2: per-query compilation vs fused workload executor
+    # (both over the no-views baseline plans: identical physical work,
+    #  so the delta isolates sharing + single-dispatch)
+    # ------------------------------------------------------------------
+    members = list(rep.result.best.queries)
+    plans = {m.name: plan_for_cq(m) for m in members}
+
+    # per-query path: one XLA program per member
+    t0 = time.perf_counter()
+    per_q = [jax.jit(E.build_executor(p, uni.store.stats, {}))
+             for p in plans.values()]
+    for f in per_q:  # first call = compile
+        f(tt, {}).n.block_until_ready()
+    perq_compile_us = (time.perf_counter() - t0) * 1e6
+    perq_compiles = len(per_q)
+
+    def run_per_query():
+        for f in per_q:
+            f(tt, {}).n.block_until_ready()
+
+    perq_us = time_us(run_per_query)
+
+    # fused path: one program for the whole workload
+    dag = build_dag(plans)
+    wl = WorkloadExecutor(dag, uni.store.stats, {})
+    t0 = time.perf_counter()
+    wl.run(tt, {})  # compile + first run (adaptive driver)
+    fused_compile_us = (time.perf_counter() - t0) * 1e6
+    fused_compiles = wl.compiles
+
+    def run_fused():
+        roots = wl.run(tt, {})
+        next(iter(roots.values())).n.block_until_ready()
+
+    fused_us = time_us(run_fused)
+    st = dag.stats()
+    workload_speedup = perq_us / max(fused_us, 1e-9)
+
+    lines.append(emit("query_eval.workload.per_query", perq_us,
+                      f"compiles={perq_compiles}"))
+    lines.append(emit("query_eval.workload.fused", fused_us,
+                      f"compiles={fused_compiles} "
+                      f"shared={st['shared_nodes']} "
+                      f"hit_rate={st['hit_rate']:.2f}"))
+    lines.append(emit("query_eval.workload.speedup", 0.0,
+                      f"{workload_speedup:.2f}x"))
+
+    assert fused_compiles < perq_compiles, (
+        "fused executor must compile strictly fewer programs")
+
+    write_bench_json("query_eval", {
+        "geomean_tt_vs_views_speedup": geo,
+        "workload_members": len(members),
+        "per_query_compile_us": perq_compile_us,
+        "per_query_compiles": perq_compiles,
+        "per_query_workload_us": perq_us,
+        "fused_compile_us": fused_compile_us,
+        "fused_compiles": fused_compiles,
+        "fused_workload_us": fused_us,
+        "fused_recompiles": wl.recompiles,
+        "dag_nodes": st["dag_nodes"],
+        "tree_nodes": st["tree_nodes"],
+        "shared_nodes": st["shared_nodes"],
+        "node_reuse_count": st["node_reuse_count"],
+        "shared_node_hit_rate": st["hit_rate"],
+        "workload_speedup": workload_speedup,
+    })

@@ -13,6 +13,7 @@ Prints ``name,us_per_call,derived`` CSV.  Roofline numbers for the full
 """
 from __future__ import annotations
 
+import os
 import sys
 
 
@@ -21,7 +22,11 @@ def main() -> None:
                             bench_query_eval, bench_reformulation,
                             bench_search)
 
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    args = sys.argv[1:]
+    if "--quick" in args:  # CI smoke: small datasets, few iterations
+        os.environ["REPRO_BENCH_QUICK"] = "1"
+        args = [a for a in args if a != "--quick"]
+    only = args[0] if args else None
     suites = {
         "search": bench_search.main,
         "query_eval": bench_query_eval.main,

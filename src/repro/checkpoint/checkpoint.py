@@ -20,7 +20,9 @@ import numpy as np
 
 
 def _flatten_with_paths(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path only exists in newer jax; the
+    # tree_util spelling is stable across the versions we support
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     paths = [jax.tree_util.keystr(k) for k, _ in flat]
     leaves = [v for _, v in flat]
     return paths, leaves, treedef

@@ -1,13 +1,26 @@
 """Query Executor: answers workload queries through the stored rewritings.
 
-Two paths with identical answers:
-  * `answer(name)`        — JAX engine over materialized padded views
-                            (the production path; jitted once per query),
+The production path is *workload-level*: every member rewriting
+(including reformulation-group members) is canonicalized into one
+shared-subplan DAG (`query/dag.py`) and compiled into a single jitted
+program (`query/workload.py`) that answers the entire workload in one
+device call — each shared subtree computed once.  Capacity overflows no
+longer raise: the adaptive driver doubles the offending node's buffer
+and recompiles under a bounded retry budget (telemetry on
+`executor.workload`).
+
+Paths with identical answers:
+  * `answer(name)` / `answer_workload()` — fused JAX engine over
+    materialized padded views (adaptive, jitted once per workload),
+  * `answer_per_query(name)` — legacy per-query jitted tree compilation
+    (kept for A/B benchmarks; raises on overflow like the old engine),
   * `answer_direct(name)` — oracle evaluation over the raw triple table
-                            (the paper's "before tuning" baseline).
+    (the paper's "before tuning" baseline).
 
 Union groups from RDFS reformulation are answered by unioning member
-rewritings (`answer_group`).
+rewritings (`answer_group`).  Disconnected rewritings (cartesian
+products) are not device-compilable and fall back to the oracle over
+the materialized extents.
 """
 from __future__ import annotations
 
@@ -17,32 +30,114 @@ import numpy as np
 from repro.core.state import State
 from repro.query import engine as E
 from repro.query import ref_engine as R
-from repro.query.plan import plan_for_cq
+from repro.query.dag import build_dag
+from repro.query.plan import has_cartesian
+from repro.query.workload import WorkloadExecutor
 from repro.rdf.triples import TripleStore
-from repro.views.materializer import materialize_state
+from repro.views.materializer import materialize_state, materialize_state_device
 
 
 class QueryExecutor:
     def __init__(self, store: TripleStore, state: State,
                  groups: dict[str, list[str]] | None = None,
-                 use_pallas: bool = False):
+                 use_pallas: bool = False, safety: float = 4.0,
+                 max_retries: int = 12, cap_planner=None,
+                 device_materialize: bool = False):
         self.store = store
         self.state = state
         self.groups = groups or {q.name: [q.name] for q in state.queries}
-        self.extents, self.device_views, self.infos = materialize_state(state, store)
-        self.tt = E.tt_device_indexes(store)
+        self._use_pallas = use_pallas
+        self._safety = safety
+        self._max_retries = max_retries
+        self._cap_planner = cap_planner
+        self._device_materialize = device_materialize
         self._queries = {q.name: q for q in state.queries}
-        self._fns = {}
-        for q in state.queries:
-            fn = E.build_executor(
-                state.rewritings[q.name], store.stats, self.infos,
-                use_pallas=use_pallas,
-            )
-            self._fns[q.name] = (jax.jit(fn), fn.out_columns)
+
+        # ---- fused workload path: one DAG + one jitted program --------
+        device_plans = {}
+        self._oracle_names: set[str] = set()
+        for name, plan in state.rewritings.items():
+            if has_cartesian(plan):
+                self._oracle_names.add(name)
+            else:
+                device_plans[name] = plan
+        self.dag = build_dag(device_plans)
+        self._load_device_state(store)
+
+        # legacy per-query path: built lazily on first access (benchmarks
+        # and A/B tests only; the production path never compiles it)
+        self.__fns = None
+
+    def _load_device_state(self, store: TripleStore) -> None:
+        """(Re)materialize views and upload TT indexes + rebuild the
+        fused executor against them."""
+        self.store = store
+        if self._device_materialize:
+            self.extents, self.device_views, self.infos = \
+                materialize_state_device(self.state, store,
+                                         use_pallas=self._use_pallas)
+        else:
+            self.extents, self.device_views, self.infos = \
+                materialize_state(self.state, store)
+        self.tt = E.tt_device_indexes(store)
+        self.workload = WorkloadExecutor(
+            self.dag, store.stats, self.infos, safety=self._safety,
+            use_pallas=self._use_pallas, max_retries=self._max_retries,
+            cap_planner=self._cap_planner,
+        )
+        self._results: dict[str, np.ndarray] | None = None
+
+    def refresh(self, store: TripleStore | None = None) -> None:
+        """Point the executor at a maintained/replaced triple store:
+        re-materializes every view extent, re-uploads the TT indexes,
+        and recompiles the fused program against the fresh statistics.
+        With no argument, refreshes device state from the current store
+        (e.g. after in-place mutation)."""
+        self._load_device_state(store if store is not None else self.store)
+        self.__fns = None
+
+    @property
+    def _fns(self):
+        if self.__fns is None:
+            self.__fns = {}
+            for q in self.state.queries:
+                if q.name in self._oracle_names:
+                    continue
+                fn = E.build_executor(
+                    self.state.rewritings[q.name], self.store.stats,
+                    self.infos, safety=self._safety,
+                    use_pallas=self._use_pallas,
+                )
+                self.__fns[q.name] = (jax.jit(fn), fn.out_columns)
+        return self.__fns
 
     # ------------------------------------------------------------------
+    def answer_workload(self) -> dict[str, np.ndarray]:
+        """Answer every member rewriting in one fused device call
+        (cached; overflow recovered adaptively)."""
+        if self._results is None:
+            roots = self.workload.run(self.tt, self.device_views)
+            self._results = {name: E.to_numpy(rel)
+                             for name, rel in roots.items()}
+        return self._results
+
     def answer(self, name: str) -> np.ndarray:
         """Answer one (possibly reformulated-member) query via its rewriting."""
+        if name in self._oracle_names:
+            return R.execute(self.state.rewritings[name], self.store,
+                             self.extents).rows
+        return self.answer_workload()[name]
+
+    def answer_group(self, original_name: str) -> set[tuple[int, ...]]:
+        """Union semantics over the reformulation members of a query."""
+        out: set[tuple[int, ...]] = set()
+        for member in self.groups[original_name]:
+            out |= {tuple(r) for r in self.answer(member).tolist()}
+        return out
+
+    # ------------------------------------------------------------------
+    def answer_per_query(self, name: str) -> np.ndarray:
+        """Legacy path: this member's rewriting compiled and run alone."""
         fn, _cols = self._fns[name]
         out = fn(self.tt, self.device_views)
         if bool(out.overflow):
@@ -51,13 +146,6 @@ class QueryExecutor:
                 f"safety factor"
             )
         return E.to_numpy(out)
-
-    def answer_group(self, original_name: str) -> set[tuple[int, ...]]:
-        """Union semantics over the reformulation members of a query."""
-        out: set[tuple[int, ...]] = set()
-        for member in self.groups[original_name]:
-            out |= {tuple(r) for r in self.answer(member).tolist()}
-        return out
 
     # ------------------------------------------------------------------
     def answer_direct(self, name: str) -> set[tuple[int, ...]]:
@@ -70,3 +158,9 @@ class QueryExecutor:
         for member in self.groups[original_name]:
             out |= self.answer_direct(member)
         return out
+
+    # ------------------------------------------------------------------
+    def telemetry(self) -> dict:
+        t = self.workload.telemetry()
+        t["oracle_fallbacks"] = len(self._oracle_names)
+        return t

@@ -18,6 +18,19 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.params import ParamSpec, is_spec
 
+
+def shard_map_compat(f, mesh, in_specs, out_specs, check: bool = False):
+    """`jax.shard_map` across jax versions: older releases only ship it
+    as `jax.experimental.shard_map` with `check_rep` instead of
+    `check_vma`."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check)
+
 # default: TP on the feature axes, DP (pod x data) on batch, params replicated
 DEFAULT_RULES: dict[str, Any] = {
     "batch": ("pod", "data"),

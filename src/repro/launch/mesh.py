@@ -11,19 +11,26 @@ gradient all-reduce per step traverses DCN/optical links).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # AxisType landed after jax 0.4; Auto is the implicit default before
+    from jax.sharding import AxisType
+
+    def _axis_kwargs(n: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n}
+except ImportError:  # pragma: no cover - depends on installed jax
+    def _axis_kwargs(n: int) -> dict:
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kwargs(len(axes)))
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     """Generic helper with pjit-style Auto axis types."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kwargs(len(axes)))
 
 
 def make_host_mesh(ndev: int | None = None, axis: str = "data"):

@@ -514,11 +514,12 @@ def _moe_expert_parallel(p, cfg: ModelConfig, x, ctx):
         shared_specs,                         # shared experts (or None)
         P(*(x_spec + (None,))),               # tokens (T_loc, d)
     )
-    smapped = jax.shard_map(
+    from repro.distributed.sharding import shard_map_compat
+
+    smapped = shard_map_compat(
         body, mesh=mesh,
         in_specs=in_specs,
         out_specs=P(*(x_spec + (None,))),
-        check_vma=False,
     )
     flat = x.reshape(B * S, d)
     out = smapped(p["norm"]["scale"], p["router"], p["w_gate"], p["w_up"],

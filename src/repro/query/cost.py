@@ -180,6 +180,94 @@ def estimate_plan(plan: Plan, stats: Statistics,
     raise TypeError(type(plan))
 
 
+# ----------------------------------------------------------------------
+# DAG-wide estimation (workload compiler)
+# ----------------------------------------------------------------------
+def estimate_dag(dag, stats: Statistics,
+                 view_infos: dict[int, RelInfo]) -> list[PlanEstimate]:
+    """Bottom-up estimates over a `WorkloadDAG`, one per node, memoized
+    by node id — each shared subtree is estimated exactly once, matching
+    how the fused executor evaluates it.
+
+    DAG nodes are positional (no column names), so the returned
+    `RelInfo.distinct` dicts are keyed by output column *index*; the
+    formulas mirror `estimate_plan` exactly.
+    """
+    ests: list[PlanEstimate] = []
+    for node in dag.nodes:
+        if node.kind == "scan":
+            atom = node.spec
+            rows = atom_cardinality(atom, stats)
+            named = _atom_col_distinct(atom, stats, rows)
+            cols = TTScan(atom).columns()
+            info = RelInfo(max(rows, 1e-3),
+                           {i: named[c] for i, c in enumerate(cols)})
+            ests.append(PlanEstimate(info.rows, C_SCAN * info.rows, info))
+        elif node.kind == "view":
+            vi = view_infos[node.spec]
+            vals = list(vi.distinct.values())
+            if len(vals) != node.width:  # stale/missing stats: assume keys
+                vals = [vi.rows] * node.width
+            info = RelInfo(vi.rows, dict(enumerate(vals)))
+            ests.append(PlanEstimate(info.rows, C_SCAN * info.rows, info))
+        elif node.kind == "filter":
+            child = ests[node.child_ids[0]]
+            ci, _value = node.spec
+            rows = max(child.rows / child.info.dcol(ci), 1e-3)
+            distinct = {c: min(d, max(rows, 1.0))
+                        for c, d in child.info.distinct.items()}
+            distinct[ci] = 1.0
+            ests.append(PlanEstimate(rows, child.cost + C_FILTER * child.rows,
+                                     RelInfo(rows, distinct)))
+        elif node.kind == "join":
+            left = ests[node.child_ids[0]]
+            right = ests[node.child_ids[1]]
+            pairs = node.spec
+            doms = [max(left.info.dcol(l), right.info.dcol(r))
+                    for l, r in pairs]
+            cross = left.rows * right.rows
+            rows = cross
+            for d in doms:
+                rows /= d
+            rows = max(rows, 1e-3)
+            lead_rows = max(cross / max(doms), 1e-3)
+            lw = dag.nodes[node.child_ids[0]].width
+            rw = dag.nodes[node.child_ids[1]].width
+            drop = {r for _, r in pairs}
+            distinct: dict = {
+                i: min(left.info.dcol(i), max(rows, 1.0)) for i in range(lw)
+            }
+            out = lw
+            for j in range(rw):
+                if j not in drop:
+                    distinct[out] = min(right.info.dcol(j), max(rows, 1.0))
+                    out += 1
+            cost = (left.cost + right.cost
+                    + C_JOIN_BUILD * right.rows + C_JOIN_PROBE * left.rows
+                    + C_OUT * lead_rows)
+            ests.append(PlanEstimate(rows, cost, RelInfo(rows, distinct),
+                                     lead_rows))
+        elif node.kind == "project":
+            child = ests[node.child_ids[0]]
+            idxs, dedupe = node.spec
+            rows = child.rows
+            if dedupe:
+                limit = 1.0
+                for c in idxs:
+                    limit *= child.info.dcol(c)
+                rows = min(rows, limit)
+            distinct = {
+                i: min(child.info.dcol(src), max(rows, 1.0))
+                for i, src in enumerate(idxs)
+            }
+            extra = C_DEDUPE * child.rows if dedupe else 0.0
+            ests.append(PlanEstimate(rows, child.cost + extra,
+                                     RelInfo(rows, distinct)))
+        else:
+            raise TypeError(node.kind)
+    return ests
+
+
 def capacity_for(rows_estimate: float, safety: float = 4.0, floor: int = 128,
                  ceil: int = 1 << 22) -> int:
     """Static buffer capacity for the JAX engine: next power of two above

@@ -106,8 +106,8 @@ def build_distributed_executor(plan: Plan, stats, view_infos, mesh,
         est = cost_mod.estimate_plan(node, stats, view_infos)
         if isinstance(node, TTScan):
             idx_name, prefix, residual, takes, self_eq, sorted_by = \
-                E._atom_scan_spec(node.atom, prefer_sorted)
-            cap = cap_of(E._range_cardinality(node.atom, prefix, stats))
+                E.atom_scan_spec(node.atom, prefer_sorted)
+            cap = cap_of(E.range_cardinality(node.atom, prefix, stats))
             cols = node.columns()
             # the TT is hash(s)-partitioned: a scan output inherits the
             # subject partitioning iff it keeps the subject column
@@ -218,9 +218,10 @@ def build_distributed_executor(plan: Plan, stats, view_infos, mesh,
         out = fn(tt, views)
         return PRel(out.data, out.n.reshape(1), out.overflow.reshape(1))
 
-    smapped = jax.shard_map(local_program, mesh=mesh,
-                            in_specs=in_specs, out_specs=out_specs,
-                            check_vma=False)
+    from repro.distributed.sharding import shard_map_compat
+
+    smapped = shard_map_compat(local_program, mesh=mesh,
+                               in_specs=in_specs, out_specs=out_specs)
     smapped.out_columns = cols  # type: ignore[attr-defined]
     smapped.est_rows = info.rows  # type: ignore[attr-defined]
     return smapped

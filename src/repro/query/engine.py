@@ -213,7 +213,7 @@ _INDEX_ORDERS = {
 }
 
 
-def _atom_scan_spec(atom, prefer_sorted: str | None = None):
+def atom_scan_spec(atom, prefer_sorted: str | None = None):
     """Static scan parameters for a TTScan node: pick the index whose sort
     prefix covers the most bound positions (exact contiguous range); among
     ties, prefer the index whose NEXT sort column is the variable a
@@ -266,7 +266,7 @@ def _atom_scan_spec(atom, prefer_sorted: str | None = None):
     return best_idx, best_prefix, residual, tuple(takes), tuple(self_eq), sorted_by
 
 
-def _range_cardinality(atom, prefix, stats) -> float:
+def range_cardinality(atom, prefix, stats) -> float:
     """Estimated size of the contiguous index range (prefix-bound only) —
     this, not the fully-filtered estimate, sizes the scan buffer."""
     covered = {c for c, _ in prefix}
@@ -301,8 +301,8 @@ def build_executor(plan: Plan, stats, view_infos: dict[int, "cost_mod.RelInfo"],
         est = cost_mod.estimate_plan(node, stats, view_infos)
         if isinstance(node, TTScan):
             idx_name, prefix, residual, takes, self_eq, sorted_by = \
-                _atom_scan_spec(node.atom, prefer_sorted)
-            cap = cap_of(node, _range_cardinality(node.atom, prefix, stats))
+                atom_scan_spec(node.atom, prefer_sorted)
+            cap = cap_of(node, range_cardinality(node.atom, prefix, stats))
             cols = node.columns()
 
             def run(tt, views, _f=functools.partial(

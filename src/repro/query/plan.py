@@ -174,6 +174,22 @@ def remap_view(plan: Plan, old_vid: int, new_vid: int,
     raise TypeError(type(plan))
 
 
+def iter_subplans(plan: Plan):
+    """Pre-order traversal over every operator of a plan tree."""
+    yield plan
+    for c in plan.children():
+        yield from iter_subplans(c)
+
+
+def has_cartesian(plan: Plan) -> bool:
+    """True when the plan contains an empty-pairs join (disconnected
+    rewriting) — those stay on the oracle path; the device engine only
+    compiles connected plans."""
+    return any(
+        isinstance(p, EquiJoin) and not p.pairs for p in iter_subplans(plan)
+    )
+
+
 def referenced_views(plan: Plan) -> set[int]:
     if isinstance(plan, ViewRef):
         return {plan.view_id}

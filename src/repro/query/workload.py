@@ -1,0 +1,230 @@
+"""Fused workload execution: one jitted program answers every rewriting.
+
+`compile_workload` lowers a `WorkloadDAG` (query/dag.py) into a single
+function evaluated in one device call: nodes run in topological order,
+each shared node computed once and its `PRel` buffer read by every
+consumer.  Static buffer capacities are planned DAG-wide from the cost
+model (`cost.estimate_dag` + `cost.capacity_for`).
+
+`WorkloadExecutor` wraps the compiled program in an adaptive driver:
+alongside the root results the program returns each node's *own*
+overflow flag (its latched overflow minus anything inherited from
+children), so when a capacity proves too small the driver knows exactly
+which buffer to grow — it doubles the offending node's capacity,
+recompiles, and retries under a bounded budget instead of raising to
+the caller.  Recompile counts and capacity history are kept as
+telemetry.
+
+The fused path compiles scans without consumer-specific sort
+preferences (a shared scan can't commit to one consumer's join order),
+so joins never assume a pre-sorted build side here; correctness is
+unaffected and the redundancy removed by sharing dominates the elided
+sort it gives up.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.query import cost as cost_mod
+from repro.query import engine as E
+from repro.query.dag import WorkloadDAG
+
+CAP_CEIL = 1 << 22
+
+
+def compile_workload(dag: WorkloadDAG, stats, view_infos,
+                     safety: float = 4.0, use_pallas: bool = False,
+                     caps: list[int] | None = None,
+                     cap_planner: Callable[[object, float], int] | None = None,
+                     ests=None):
+    """Lower the DAG into `fn(tt, views) -> (roots, own_overflow)`.
+
+    roots: {member name: PRel}; own_overflow: (n_nodes,) bool vector of
+    node-local overflows.  `caps` pins every node's buffer capacity
+    (adaptive recompiles); when None, capacities are planned from the
+    DAG-wide estimates (`cap_planner(node, est_rows)` overrides the
+    default `capacity_for`, mirroring `build_executor`'s cap_override).
+    The planned capacities are returned on `fn.caps`.  `ests` accepts
+    precomputed `cost.estimate_dag` output (estimates don't depend on
+    capacities, so adaptive recompiles can reuse them).
+    """
+    if ests is None:
+        ests = cost_mod.estimate_dag(dag, stats, view_infos)
+    plan_caps = caps is None
+    if plan_caps:
+        caps = [0] * len(dag.nodes)
+
+    def _cap(node, rows: float) -> int:
+        if cap_planner is not None:
+            return int(cap_planner(node.plan, rows))
+        return cost_mod.capacity_for(rows, safety=safety)
+
+    steps: list[tuple[Callable, tuple[int, ...], str]] = []
+    for node in dag.nodes:
+        if node.kind == "scan":
+            idx_name, prefix, residual, takes, self_eq, _sorted = \
+                E.atom_scan_spec(node.spec)
+            if plan_caps:
+                caps[node.id] = _cap(
+                    node, E.range_cardinality(node.spec, prefix, stats))
+
+            def step(tt, views, res, _f=functools.partial(
+                    E.scan_pattern, prefix=prefix, residual=residual,
+                    takes=takes, self_eq=self_eq, cap=caps[node.id]),
+                    _idx=idx_name):
+                return _f(tt[_idx])
+
+        elif node.kind == "view":
+            def step(tt, views, res, _vid=node.spec):
+                return views[_vid]
+
+        elif node.kind == "filter":
+            ci, value = node.spec
+
+            def step(tt, views, res, _c=node.child_ids[0], _ci=ci, _v=value):
+                return E.filter_eq(res[_c], _ci, _v)
+
+        elif node.kind == "join":
+            lid, rid = node.child_ids
+            pairs = node.spec
+            doms = [max(ests[lid].info.dcol(l), ests[rid].info.dcol(r))
+                    for l, r in pairs]
+            lead_k = max(range(len(doms)), key=lambda i: doms[i])
+            lcol, rcol = pairs[lead_k]
+            residual = tuple(p for k, p in enumerate(pairs) if k != lead_k)
+            drop = {r for _, r in pairs}
+            keep_right = tuple(i for i in range(dag.nodes[rid].width)
+                               if i not in drop)
+            if plan_caps:
+                lead_rows = max(
+                    ests[lid].rows * ests[rid].rows / doms[lead_k], 1e-3)
+                caps[node.id] = _cap(node, lead_rows)
+
+            def step(tt, views, res, _l=lid, _r=rid, _lc=lcol, _rc=rcol,
+                     _res=residual, _keep=keep_right, _cap=caps[node.id]):
+                return E.join(res[_l], res[_r], _lc, _rc, _res, _keep, _cap,
+                              use_pallas=use_pallas)
+
+        elif node.kind == "project":
+            idxs, dedupe = node.spec
+
+            def step(tt, views, res, _c=node.child_ids[0], _idx=idxs,
+                     _d=dedupe):
+                return E.project(res[_c], _idx, _d)
+
+        else:
+            raise TypeError(node.kind)
+        steps.append((step, node.child_ids, node.kind))
+
+    roots = dict(dag.roots)
+
+    def fn(tt, views):
+        res: list[E.PRel] = []
+        own: list[jax.Array] = []
+        for run, child_ids, kind in steps:
+            rel = run(tt, views, res)
+            if kind == "view":
+                # view buffers are packed at exact capacity by the
+                # materializer; nothing here for the driver to grow
+                own.append(jnp.asarray(False))
+            else:
+                inherited = jnp.asarray(False)
+                for c in child_ids:
+                    inherited = inherited | res[c].overflow
+                own.append(rel.overflow & ~inherited)
+            res.append(rel)
+        ovf = jnp.stack(own) if own else jnp.zeros((0,), dtype=bool)
+        return {name: res[nid] for name, nid in roots.items()}, ovf
+
+    fn.caps = caps  # type: ignore[attr-defined]
+    return fn
+
+
+class WorkloadExecutor:
+    """Adaptive driver around the fused workload program.
+
+    `run` executes the whole workload in a single device call; on
+    capacity overflow it doubles the offending nodes' capacities,
+    recompiles, and retries — up to `max_retries` recompiles, after
+    which (or once a buffer hits the capacity ceiling) it raises.
+    """
+
+    def __init__(self, dag: WorkloadDAG, stats, view_infos, *,
+                 safety: float = 4.0, use_pallas: bool = False,
+                 max_retries: int = 12,
+                 cap_planner: Callable[[object, float], int] | None = None):
+        self.dag = dag
+        self.stats = stats
+        self.view_infos = view_infos
+        self.safety = safety
+        self.use_pallas = use_pallas
+        self.max_retries = max_retries
+        self.cap_planner = cap_planner
+        self.caps: list[int] | None = None
+        # telemetry
+        self.compiles = 0
+        self.runs = 0
+        self.recompiles = 0
+        self.cap_history: dict[int, list[int]] = {}
+        self._jit = None
+        self._ests = None
+
+    def _compile(self) -> None:
+        if self._ests is None:
+            self._ests = cost_mod.estimate_dag(self.dag, self.stats,
+                                               self.view_infos)
+        fn = compile_workload(self.dag, self.stats, self.view_infos,
+                              safety=self.safety, use_pallas=self.use_pallas,
+                              caps=self.caps, cap_planner=self.cap_planner,
+                              ests=self._ests)
+        self.caps = fn.caps
+        self._jit = jax.jit(fn)
+        self.compiles += 1
+
+    def run(self, tt, views) -> dict[str, E.PRel]:
+        """Answer every workload member; returns {name: PRel}."""
+        if self._jit is None:
+            self._compile()
+        attempt = 0
+        while True:
+            roots, own = self._jit(tt, views)
+            self.runs += 1
+            own_np = np.asarray(own)
+            if not own_np.any():
+                return roots
+            offending = np.nonzero(own_np)[0].tolist()
+            if attempt >= self.max_retries:
+                raise RuntimeError(
+                    f"capacity overflow persists after {attempt} adaptive "
+                    f"recompiles (nodes {offending}); estimates are "
+                    f"pathologically low — raise max_retries or safety"
+                )
+            grew = False
+            for nid in offending:
+                cur = self.caps[nid]
+                new = min(max(cur * 2, 2), CAP_CEIL)
+                if new > cur:
+                    self.caps[nid] = new
+                    self.cap_history.setdefault(nid, [cur]).append(new)
+                    grew = True
+            if not grew:
+                raise RuntimeError(
+                    f"capacity ceiling ({CAP_CEIL}) reached on nodes "
+                    f"{offending}; result exceeds the engine's maximum "
+                    f"buffer size"
+                )
+            self._compile()
+            self.recompiles += 1
+            attempt += 1
+
+    def telemetry(self) -> dict:
+        t = dict(self.dag.stats())
+        t.update(compiles=self.compiles, runs=self.runs,
+                 recompiles=self.recompiles,
+                 grown_nodes=sorted(self.cap_history))
+        return t

@@ -1,0 +1,87 @@
+"""Workload query serving: batched requests through the fused executor.
+
+The paper's demo answers one query at a time; at serving scale requests
+arrive in batches drawn from the tuned workload.  `QueryServer` front-
+ends a `QueryExecutor`: the whole workload is answered by ONE jitted
+device program (shared subplans computed once), so a batch of requests
+— whatever its mix of queries — costs at most one device call, and
+repeat batches are served from the cached workload results until the
+store or state changes (`invalidate`).
+
+Union semantics over RDFS reformulation groups are applied per request,
+matching `QueryExecutor.answer_group`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.executor import QueryExecutor
+
+
+@dataclass
+class ServeStats:
+    requests: int = 0
+    batches: int = 0
+    unknown: int = 0
+    device_runs: int = 0
+    compiles: int = 0
+    recompiles: int = 0
+    shared_nodes: int = 0
+    node_reuse_count: int = 0
+
+    def as_dict(self) -> dict:
+        return dict(self.__dict__)
+
+
+class QueryServer:
+    def __init__(self, executor: QueryExecutor):
+        self.executor = executor
+        self.stats = ServeStats()
+
+    @classmethod
+    def from_tuned(cls, store, workload, schema=None, type_id=None, cfg=None):
+        """Convenience: run the wizard, serve through its executor."""
+        from repro.core.wizard import tune
+
+        rep = tune(store, workload, schema, type_id, cfg)
+        return cls(rep.executor)
+
+    # ------------------------------------------------------------------
+    def answer_batch(self, names: list[str]) -> list[set[tuple[int, ...]] | None]:
+        """Answer a batch of workload query names (union-group semantics).
+
+        Unknown names yield None instead of failing the batch.  The
+        first batch triggers the single fused workload evaluation; later
+        batches are served from the cached results.
+        """
+        self.executor.answer_workload()  # at most one device call
+        out: list[set[tuple[int, ...]] | None] = []
+        for name in names:
+            if name in self.executor.groups:
+                out.append(self.executor.answer_group(name))
+            else:
+                self.stats.unknown += 1
+                out.append(None)
+        self.stats.requests += len(names)
+        self.stats.batches += 1
+        self._sync_telemetry()
+        return out
+
+    def answer(self, name: str) -> set[tuple[int, ...]] | None:
+        return self.answer_batch([name])[0]
+
+    # ------------------------------------------------------------------
+    def invalidate(self, store=None) -> None:
+        """Refresh after TT maintenance: re-materialize view extents,
+        re-upload the triple-table indexes (optionally from a replaced
+        store), and drop cached results so the next batch re-runs the
+        fused program against fresh data."""
+        self.executor.refresh(store)
+
+    def _sync_telemetry(self) -> None:
+        t = self.executor.telemetry()
+        self.stats.device_runs = t["runs"]
+        self.stats.compiles = t["compiles"]
+        self.stats.recompiles = t["recompiles"]
+        self.stats.shared_nodes = t["shared_nodes"]
+        self.stats.node_reuse_count = t["node_reuse_count"]

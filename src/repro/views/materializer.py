@@ -1,7 +1,17 @@
 """View Materializer: compute + store view extents.
 
-Extents are evaluated with the oracle engine (host-side batch job) and
-packaged as padded device relations for the JAX Query Executor, with
+Two paths with identical extents:
+
+  * `materialize_state` — oracle engine (host-side batch job), the
+    original path;
+  * `materialize_state_device` — the view CQs are planned as TT-scan
+    trees, canonicalized into one shared-subplan DAG, and evaluated by
+    the same fused workload compiler the Query Executor uses
+    (`query/workload.py`): one device call materializes every extent,
+    with scans/joins shared across views and capacity overflow
+    recovered adaptively.
+
+Either way extents are packaged as padded device relations with
 measured statistics (rows + per-column distincts) that replace the
 estimates once available — mirroring the paper's ANALYZE-after-CREATE.
 """
@@ -48,4 +58,48 @@ def materialize_state(state: State, store: TripleStore):
         infos[vid] = measured_info(ext)
         cap = capacity_for(len(ext.rows), safety=1.0)
         device[vid] = E.make_prel(ext.rows, cap)
+    return extents, device, infos
+
+
+def materialize_state_device(state: State, store: TripleStore,
+                             safety: float = 4.0, use_pallas: bool = False,
+                             max_retries: int = 12):
+    """Device path: materialize every view extent in one fused device
+    call through the shared-subplan workload compiler.
+
+    Same return contract as `materialize_state`.  View CQs of one state
+    frequently share triple patterns (fusion produces overlapping
+    bodies); the DAG computes each shared scan/join once for all views.
+    """
+    from repro.query.dag import build_dag
+    from repro.query.plan import has_cartesian
+    from repro.query.workload import WorkloadExecutor
+
+    plans: dict[str, object] = {}
+    oracle_vids: list[int] = []
+    for vid, view in state.views.items():
+        p = plan_for_cq(view.cq)
+        if has_cartesian(p):  # disconnected view body: oracle only
+            oracle_vids.append(vid)
+        else:
+            plans[f"v{vid}"] = p
+    extents: dict[int, R.Relation] = {}
+    device: dict[int, E.PRel] = {}
+    infos: dict[int, RelInfo] = {}
+    roots: dict[str, E.PRel] = {}
+    if plans:
+        dag = build_dag(plans)
+        wl = WorkloadExecutor(dag, store.stats, {}, safety=safety,
+                              use_pallas=use_pallas, max_retries=max_retries)
+        roots = wl.run(E.tt_device_indexes(store), {})
+    for vid, view in state.views.items():
+        if vid in oracle_vids:
+            ext = materialize_view(view.cq, store)
+        else:
+            rows = E.to_numpy(roots[f"v{vid}"])
+            ext = R.Relation(rows, tuple(h.name for h in view.cq.head))
+        extents[vid] = ext
+        infos[vid] = measured_info(ext)
+        device[vid] = E.make_prel(
+            ext.rows, capacity_for(len(ext.rows), safety=1.0))
     return extents, device, infos

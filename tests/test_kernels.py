@@ -108,6 +108,7 @@ def test_engine_with_pallas_join_matches_oracle():
 
 
 def test_property_join_count_random():
+    pytest.importorskip("hypothesis")
     from hypothesis import given, settings
     from hypothesis import strategies as st
 

@@ -2,6 +2,9 @@
 suite: canonicalization, padded-join equivalence, capacity planning,
 reformulation completeness under random schemas."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

@@ -5,6 +5,8 @@ Includes a hypothesis property test driving random transition paths.
 """
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

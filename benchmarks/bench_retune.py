@@ -1,0 +1,96 @@
+"""Incremental re-tuning A/B: cold `tune()` vs warm `retune()+apply()`.
+
+Scenario (the TuningSession lifecycle under workload drift): a store is
+tuned for a prefix workload; then one query is added.  The cold path
+re-runs the whole wizard from `initial_state`; the warm path resumes
+the States Navigator from the previous best and delta-swaps only the
+views whose canonical key changed.  Reports states explored, quality
+totals, wall time, and the materialize/reuse split; lands in
+BENCH_retune.json with the acceptance assertions applied.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.bench_common import emit, quick_mode, write_bench_json
+from repro.api import (QualityWeights, SearchConfig, TuningSession,
+                       WizardConfig)
+from repro.rdf.generator import generate, lubm_workload
+
+
+def _cfg(quick: bool) -> WizardConfig:
+    return WizardConfig(search=SearchConfig(
+        strategy="greedy", max_states=600 if quick else 3000,
+        weights=QualityWeights(w_exec=1.0, w_maint=1.0, w_space=1.0)))
+
+
+def main(lines: list[str]) -> None:
+    quick = quick_mode()
+    uni = generate(n_universities=1 if quick else 2, seed=0)
+    wl = lubm_workload(uni.dictionary)
+    prefix, perturbation = wl[:-1], wl[-1]
+
+    # cold: one-shot wizard over the full (perturbed) workload
+    t0 = time.perf_counter()
+    cold = TuningSession(uni.store, wl, schema=uni.schema,
+                         type_id=uni.type_id, cfg=_cfg(quick))
+    cold_rep = cold.retune()
+    cold_apply = cold.apply()
+    cold_us = (time.perf_counter() - t0) * 1e6
+
+    # warm: session tuned on the prefix, then add the query + retune
+    warm = TuningSession(uni.store, prefix, schema=uni.schema,
+                         type_id=uni.type_id, cfg=_cfg(quick))
+    warm.retune()
+    warm.apply()
+    t0 = time.perf_counter()
+    warm.add_query(perturbation)
+    warm_rep = warm.retune()
+    warm_apply = warm.apply()
+    warm_us = (time.perf_counter() - t0) * 1e6
+
+    cold_explored = cold_rep.result.explored
+    warm_explored = warm_rep.result.explored
+    cold_total = cold_rep.result.best_quality.total
+    warm_total = warm_rep.result.best_quality.total
+
+    lines.append(emit("retune.cold", cold_us,
+                      f"explored={cold_explored};total={cold_total:.0f};"
+                      f"materialized={len(cold_apply.materialized)}"))
+    lines.append(emit("retune.warm", warm_us,
+                      f"explored={warm_explored};total={warm_total:.0f};"
+                      f"materialized={len(warm_apply.materialized)};"
+                      f"reused={len(warm_apply.reused)}"))
+    lines.append(emit(
+        "retune.speedup", 0.0,
+        f"explored={cold_explored / max(warm_explored, 1):.2f}x;"
+        f"wall={cold_us / max(warm_us, 1e-9):.2f}x"))
+
+    # acceptance: strictly fewer states at equal-or-better quality, and
+    # the swap only touches the diffed views
+    assert warm_explored < cold_explored, (
+        f"warm retune must explore strictly fewer states "
+        f"({warm_explored} vs {cold_explored})")
+    assert warm_total <= cold_total + 1e-9, (
+        f"warm retune must reach equal-or-better quality "
+        f"({warm_total} vs {cold_total})")
+    assert warm_apply.reused and \
+        len(warm_apply.materialized) < len(warm.best.views), (
+            "delta apply must reuse surviving views")
+
+    write_bench_json("retune", {
+        "workload_queries": len(wl),
+        "perturbation": perturbation.name,
+        "cold_explored": cold_explored,
+        "warm_explored": warm_explored,
+        "explored_ratio": cold_explored / max(warm_explored, 1),
+        "cold_quality_total": cold_total,
+        "warm_quality_total": warm_total,
+        "cold_wall_us": cold_us,
+        "warm_wall_us": warm_us,
+        "wall_speedup": cold_us / max(warm_us, 1e-9),
+        "cold_views_materialized": len(cold_apply.materialized),
+        "warm_views_materialized": len(warm_apply.materialized),
+        "warm_views_reused": len(warm_apply.reused),
+        "warm_views_dropped": len(warm_apply.dropped),
+    })

@@ -2,6 +2,7 @@
 
   search          demo §4 / TR: strategies vs states explored vs quality
   query_eval      demo finale: TT vs materialized views latency
+  retune          TuningSession: cold tune() vs warm retune()+delta apply()
   reformulation   §3 Workload Processor: union sizes + completeness gain
   maintenance     quality m-term: incremental vs recompute
   kernels         Pallas join probe vs jnp oracle (+TPU derived terms)
@@ -20,7 +21,7 @@ import sys
 def main() -> None:
     from benchmarks import (bench_kernels, bench_lm_step, bench_maintenance,
                             bench_query_eval, bench_reformulation,
-                            bench_search)
+                            bench_retune, bench_search)
 
     args = sys.argv[1:]
     if "--quick" in args:  # CI smoke: small datasets, few iterations
@@ -30,6 +31,7 @@ def main() -> None:
     suites = {
         "search": bench_search.main,
         "query_eval": bench_query_eval.main,
+        "retune": bench_retune.main,
         "reformulation": bench_reformulation.main,
         "maintenance": bench_maintenance.main,
         "kernels": bench_kernels.main,

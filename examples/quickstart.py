@@ -1,12 +1,15 @@
-"""Quickstart: tune an RDF store with RDFViewS and query it, end to end.
+"""Quickstart: tune an RDF store with a TuningSession and query it.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Covers the full session lifecycle: cold retune + apply, batched
+answers from the materialized views, then workload drift — one query
+removed, the tuning warm-started and the view set delta-swapped online.
 """
 import time
 
-from repro.core.quality import QualityWeights, quality
-from repro.core.search import SearchConfig
-from repro.core.wizard import WizardConfig, tune
+from repro.api import (QualityWeights, SearchConfig, TuningSession,
+                       WizardConfig)
 from repro.rdf.generator import generate, lubm_workload
 
 # 1) an RDF universe: LUBM-style instance data + RDFS schema
@@ -15,26 +18,30 @@ workload = lubm_workload(uni.dictionary)
 print(f"triple table: {len(uni.store):,} triples, "
       f"workload: {len(workload)} weighted conjunctive queries")
 
-# 2) run the wizard: reformulate under RDFS, search view configurations
+# 2) open a tuning session: RDFS reformulation (rdf:type inferred from
+# the schema), then the States Navigator searches view configurations
 cfg = WizardConfig(
     search=SearchConfig(strategy="greedy", max_states=500,
                         weights=QualityWeights(w_exec=1.0, w_maint=0.1,
                                                w_space=0.01)))
+session = TuningSession(uni.store, workload, schema=uni.schema, cfg=cfg)
 t0 = time.perf_counter()
-report = tune(uni.store, workload, uni.schema, uni.type_id, cfg)
+report = session.retune()          # cold: from the paper's initial state
+swap = session.apply()             # materialize + compile the chosen views
 print(f"\nwizard finished in {time.perf_counter() - t0:.2f}s")
 print(report.summary())
+print(swap.summary())
 
 # 3) answer the workload from the materialized views and compare with
 # direct evaluation over the triple table (the demo's finale)
 print("\nanswers (views vs direct):")
 for q in workload:
-    report.executor.answer_group(q.name)  # warm-up (jit compile)
+    session.answer(q.name)  # warm-up (jit compile)
     t0 = time.perf_counter()
-    via_views = report.executor.answer_group(q.name)
+    via_views = session.answer(q.name)
     t_views = time.perf_counter() - t0
     t0 = time.perf_counter()
-    direct = report.executor.answer_group_direct(q.name)
+    direct = session.executor.answer_group_direct(q.name)
     t_direct = time.perf_counter() - t0
     assert via_views == direct
     print(f"  {q.name}: {len(via_views):5d} answers | views "
@@ -42,6 +49,20 @@ for q in workload:
 
 # 4) the schema matters: q4 asks for Faculty, which no triple states
 # directly — reformulation recovers the entailed answers
-q4 = report.executor.answer_group("q4")
+q4 = session.answer("q4")
 print(f"\nq4 (ub:Faculty via RDFS reasoning): {len(q4)} answers "
       f"(0 without the schema)")
+
+# 5) the workload drifts: drop the heaviest query, retune INCREMENTALLY
+# — the navigator warm-starts from the previous best instead of
+# re-deriving everything, and apply() only touches the diffed views
+removed = session.remove_query("q1")
+t0 = time.perf_counter()
+retune = session.retune()
+swap = session.apply()
+dt = time.perf_counter() - t0
+print(f"\nafter dropping {removed.name}: {retune.summary()}")
+print(f"{swap.summary()} — in {dt:.2f}s, serving uninterrupted")
+for q in workload[1:]:
+    assert session.answer(q.name) == session.executor.answer_group_direct(q.name)
+print("remaining workload still answered exactly")

@@ -1,0 +1,25 @@
+"""Public API facade for the RDFViewS wizard.
+
+The supported surface for applications:
+
+    from repro.api import TuningSession, WizardConfig, SearchConfig
+
+Everything else under `repro.*` is engine internals and may change
+between releases.  `repro.core.wizard.tune` remains as a deprecated
+one-shot shim over a throwaway `TuningSession`.
+"""
+from repro.core.quality import QualityWeights
+from repro.core.search import SearchConfig
+from repro.core.wizard import WizardConfig
+
+from repro.api.session import (ApplyReport, RetuneReport,  # noqa: F401
+                               TuningSession)
+
+__all__ = [
+    "TuningSession",
+    "RetuneReport",
+    "ApplyReport",
+    "WizardConfig",
+    "SearchConfig",
+    "QualityWeights",
+]

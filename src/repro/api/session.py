@@ -1,0 +1,318 @@
+"""TuningSession: the stateful lifecycle API of the storage wizard.
+
+The paper frames RDFViewS as a one-shot wizard; a production store is
+tuned continuously.  A session owns the triple store, the RDFS schema
+and an evolving workload, and drives the pipeline incrementally:
+
+    session = TuningSession(store, workload, schema=schema)
+    session.retune()            # cold: search from the initial state
+    session.apply()             # materialize + compile the chosen views
+    session.add_query(q_new)    # the workload drifts...
+    session.retune()            # warm: search resumes from the last best
+    session.apply()             # delta swap: only new views materialize
+    server = session.serve()    # batched serving + online retuning
+    session.save("ckpt/")       # persist; TuningSession.load resumes
+
+`retune()` warm-starts the States Navigator from the previous best
+state (grafting added queries in their initial-state shape, dropping
+removed ones) instead of re-deriving everything from `initial_state` —
+strictly fewer states explored for a workload perturbation.  `apply()`
+diffs old vs new view configurations by canonical key so the
+materializer only evaluates genuinely new views, dead extents are
+dropped, and the fused executor hot-swaps its compiled workload program
+in place (a `QueryServer` holding it keeps serving).
+
+`core.wizard.tune()` remains as a one-shot compatibility shim over a
+throwaway session.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.core.executor import QueryExecutor
+from repro.core.quality import QualityBreakdown, quality
+from repro.core.queries import CQ
+from repro.core.reformulation import infer_type_id, reformulate_workload
+from repro.core.search import SearchResult, search
+from repro.core.state import (State, drop_queries, graft_queries,
+                              initial_state)
+from repro.core.wizard import WizardConfig
+from repro.rdf.dictionary import Dictionary
+from repro.rdf.schema import RDFSchema
+from repro.rdf.triples import TripleStore
+
+from repro.api import serde
+
+_SESSION_FILE = "session.json"
+_PAYLOAD_VERSION = 1
+
+
+@dataclass
+class RetuneReport:
+    """One navigator run inside a session."""
+
+    result: SearchResult
+    seed: State                 # state the navigator started from
+    seed_quality: QualityBreakdown
+    warm: bool                  # resumed from the previous best?
+    added: list[str] = field(default_factory=list)    # member names grafted
+    removed: list[str] = field(default_factory=list)  # member names dropped
+
+    def summary(self) -> str:
+        mode = "warm" if self.warm else "cold"
+        return (f"{mode} retune (+{len(self.added)}/-{len(self.removed)} "
+                f"members): seed total={self.seed_quality.total:.1f}; "
+                f"{self.result.summary()}")
+
+
+@dataclass
+class ApplyReport:
+    """One view swap: which extents were touched."""
+
+    materialized: list[int]     # view ids actually evaluated
+    reused: list[int]           # view ids carried over by canonical key
+    dropped: list[int]          # previous view ids discarded
+    full: bool                  # first apply (everything materialized)
+
+    def summary(self) -> str:
+        kind = "full" if self.full else "delta"
+        return (f"{kind} apply: materialized={len(self.materialized)} "
+                f"reused={len(self.reused)} dropped={len(self.dropped)}")
+
+
+class TuningSession:
+    """Stateful wizard: evolve the workload, retune incrementally, swap
+    view configurations online, persist and resume."""
+
+    def __init__(self, store: TripleStore, workload=(),
+                 schema: RDFSchema | None = None, type_id: int | None = None,
+                 cfg: WizardConfig | None = None):
+        self.store = store
+        self.schema = schema
+        self.cfg = cfg or WizardConfig()
+        self._type_id = type_id
+        self._workload: dict[str, CQ] = {}
+        for q in workload:
+            self.add_query(q)
+        self._groups: dict[str, list[str]] = {}
+        self._best: State | None = None
+        self._best_quality: QualityBreakdown | None = None
+        self._applied: State | None = None
+        self.executor: QueryExecutor | None = None
+
+    # ------------------------------------------------------------------
+    # workload evolution
+    # ------------------------------------------------------------------
+    def add_query(self, q: CQ) -> None:
+        if not q.name:
+            raise ValueError("workload queries must be named")
+        if q.name in self._workload:
+            raise ValueError(f"duplicate query name {q.name!r}")
+        self._workload[q.name] = q
+
+    def remove_query(self, name: str) -> CQ:
+        if name not in self._workload:
+            raise KeyError(f"unknown query {name!r}")
+        return self._workload.pop(name)
+
+    @property
+    def workload(self) -> list[CQ]:
+        return list(self._workload.values())
+
+    @property
+    def groups(self) -> dict[str, list[str]]:
+        return self._groups
+
+    @property
+    def best(self) -> State | None:
+        return self._best
+
+    @property
+    def best_quality(self) -> QualityBreakdown | None:
+        return self._best_quality
+
+    # ------------------------------------------------------------------
+    # retune: warm-started States Navigator
+    # ------------------------------------------------------------------
+    def _resolve_type_id(self) -> int | None:
+        if not (self.cfg.use_schema and self.schema is not None):
+            return None
+        if self._type_id is None:
+            self._type_id = infer_type_id(self.workload, self.schema)
+        if self._type_id is None:
+            raise ValueError(
+                "type_id is required for schema reformulation and could "
+                "not be inferred unambiguously from the workload; pass "
+                "type_id= explicitly")
+        return self._type_id
+
+    def _members(self) -> tuple[list[CQ], dict[str, list[str]]]:
+        if self.cfg.use_schema and self.schema is not None:
+            return reformulate_workload(self.workload, self.schema,
+                                        self._resolve_type_id(),
+                                        self.cfg.max_reformulations)
+        return self.workload, {q.name: [q.name] for q in self.workload}
+
+    def retune(self) -> RetuneReport:
+        """Re-run the States Navigator against the current workload.
+
+        First call searches cold from the paper's initial state; later
+        calls warm-start from the previous best: kept queries retain
+        their already-relaxed views and rewritings, added queries are
+        grafted in initial-state shape, removed queries are dropped (and
+        their now-dead views garbage-collected).
+        """
+        if not self._workload:
+            raise ValueError("cannot retune an empty workload")
+        members, groups = self._members()
+        added: list[str] = []
+        removed: list[str] = []
+        if self._best is None:
+            seed = initial_state(members)
+            warm = False
+        else:
+            warm = True
+            seed = self._best
+            prev_names = {q.name for q in seed.queries}
+            new_names = {m.name for m in members}
+            removed = sorted(prev_names - new_names)
+            if removed:
+                seed = drop_queries(seed, set(removed))
+            grafts = [m for m in members if m.name not in prev_names]
+            added = [m.name for m in grafts]
+            if grafts:
+                seed = graft_queries(seed, grafts)
+        seed_q = quality(seed, self.store.stats, self.cfg.search.weights)
+        result = search(seed, self.store.stats, self.cfg.search)
+        self._best, self._best_quality = result.best, result.best_quality
+        self._groups = groups
+        return RetuneReport(result=result, seed=seed, seed_quality=seed_q,
+                            warm=warm, added=added, removed=removed)
+
+    # ------------------------------------------------------------------
+    # apply: delta view swap
+    # ------------------------------------------------------------------
+    def apply(self) -> ApplyReport:
+        """Install the last retune's best configuration.
+
+        The first apply materializes everything and compiles the fused
+        executor; every later apply is a delta swap — only views whose
+        canonical key changed are materialized, surviving extents are
+        reused (column-permuted), dead extents dropped, and the compiled
+        workload program is hot-swapped on the SAME executor object.
+        """
+        if self._best is None:
+            raise RuntimeError("retune() before apply()")
+        if self.executor is None:
+            self.executor = QueryExecutor(self.store, self._best,
+                                          self._groups,
+                                          use_pallas=self.cfg.use_pallas)
+            report = ApplyReport(materialized=sorted(self._best.views),
+                                 reused=[], dropped=[], full=True)
+        else:
+            swap = self.executor.swap_state(self._best, self._groups)
+            report = ApplyReport(full=False, **swap)
+        self._applied = self._best
+        return report
+
+    @property
+    def pending(self) -> bool:
+        """True when the last retune has not been applied yet."""
+        return self._best is not None and self._best is not self._applied
+
+    # ------------------------------------------------------------------
+    # answering / serving
+    # ------------------------------------------------------------------
+    def _ensure_applied(self) -> QueryExecutor:
+        if self._best is None:
+            self.retune()
+        if self.executor is None or self.pending:
+            self.apply()
+        return self.executor
+
+    def answer(self, name: str) -> set[tuple[int, ...]]:
+        """Union-group semantics over the original workload query."""
+        return self._ensure_applied().answer_group(name)
+
+    def serve(self):
+        """Batched query server bound to this session's executor; the
+        server survives `retune()+apply()` (hot swap) and can trigger
+        them itself via `QueryServer.retune_online`."""
+        from repro.serve.query_server import QueryServer
+
+        return QueryServer(self._ensure_applied(), session=self)
+
+    # ------------------------------------------------------------------
+    # persistence
+    # ------------------------------------------------------------------
+    def save(self, ckpt_dir: str, step: int | None = None) -> str:
+        """Persist the session: triple table through the atomic array
+        checkpointer, symbolic state (workload, schema, best state,
+        groups) as a session.json sidecar.  Returns the step directory."""
+        if step is None:
+            latest = ckpt.latest_step(ckpt_dir)
+            step = 0 if latest is None else latest + 1
+        path = ckpt.save(ckpt_dir, step, {"triples": self.store.triples})
+        d = self.store.dictionary
+        payload = {
+            "version": _PAYLOAD_VERSION,
+            "type_id": self._type_id,
+            "cfg": serde.cfg_to_json(self.cfg),
+            "dictionary": list(d._to_str) if d is not None else None,
+            "schema": (serde.schema_to_json(self.schema)
+                       if self.schema is not None else None),
+            "workload": [serde.cq_to_json(q) for q in self.workload],
+            "best": (serde.state_to_json(self._best)
+                     if self._best is not None else None),
+            "groups": self._groups,
+        }
+        with open(os.path.join(path, _SESSION_FILE), "w") as f:
+            json.dump(payload, f)
+        return path
+
+    @classmethod
+    def load(cls, ckpt_dir: str, step: int | None = None,
+             cfg: WizardConfig | None = None) -> "TuningSession":
+        """Resume a saved session: the next retune() warm-starts from the
+        restored best state.  The executor is rebuilt lazily on the
+        first apply() (device buffers are not checkpointed).  The saved
+        config — search strategy, budgets, quality weights — is restored
+        with the session so the tuning objective survives the round
+        trip; pass cfg= only to deliberately override it."""
+        if step is None:
+            step = ckpt.latest_step(ckpt_dir)
+            if step is None:
+                raise FileNotFoundError(f"no checkpoint under {ckpt_dir!r}")
+        with open(os.path.join(ckpt_dir, f"step_{step:08d}",
+                               _SESSION_FILE)) as f:
+            payload = json.load(f)
+        if payload["version"] != _PAYLOAD_VERSION:
+            raise ValueError(
+                f"unsupported session payload version {payload['version']}")
+        arrays = ckpt.restore(ckpt_dir, step,
+                              {"triples": np.zeros((0, 3), np.int32)})
+        dictionary = None
+        if payload["dictionary"] is not None:
+            dictionary = Dictionary()
+            dictionary.encode_many(payload["dictionary"])
+        store = TripleStore(arrays["triples"], dictionary)
+        schema = (serde.schema_from_json(payload["schema"])
+                  if payload["schema"] is not None else None)
+        if cfg is None:
+            cfg = serde.cfg_from_json(payload["cfg"])
+        session = cls(store,
+                      workload=[serde.cq_from_json(q)
+                                for q in payload["workload"]],
+                      schema=schema, type_id=payload["type_id"], cfg=cfg)
+        if payload["best"] is not None:
+            session._best = serde.state_from_json(payload["best"])
+            session._best_quality = quality(session._best, store.stats,
+                                            session.cfg.search.weights)
+            session._groups = {k: list(v)
+                               for k, v in payload["groups"].items()}
+        return session

@@ -54,19 +54,22 @@ class QueryExecutor:
         self._queries = {q.name: q for q in state.queries}
 
         # ---- fused workload path: one DAG + one jitted program --------
-        device_plans = {}
-        self._oracle_names: set[str] = set()
-        for name, plan in state.rewritings.items():
-            if has_cartesian(plan):
-                self._oracle_names.add(name)
-            else:
-                device_plans[name] = plan
-        self.dag = build_dag(device_plans)
+        self._build_dag()
         self._load_device_state(store)
 
         # legacy per-query path: built lazily on first access (benchmarks
         # and A/B tests only; the production path never compiles it)
         self.__fns = None
+
+    def _build_dag(self) -> None:
+        device_plans = {}
+        self._oracle_names: set[str] = set()
+        for name, plan in self.state.rewritings.items():
+            if has_cartesian(plan):
+                self._oracle_names.add(name)
+            else:
+                device_plans[name] = plan
+        self.dag = build_dag(device_plans)
 
     def _load_device_state(self, store: TripleStore) -> None:
         """(Re)materialize views and upload TT indexes + rebuild the
@@ -95,6 +98,37 @@ class QueryExecutor:
         (e.g. after in-place mutation)."""
         self._load_device_state(store if store is not None else self.store)
         self.__fns = None
+
+    def swap_state(self, state: State,
+                   groups: dict[str, list[str]] | None = None) -> dict:
+        """Online view swap onto a retuned configuration: diff old vs new
+        views by canonical key, materialize ONLY the genuinely new
+        extents (reusing surviving ones through a column permutation),
+        drop dead extents, and hot-swap the compiled workload program.
+        The executor object stays valid throughout — a server holding it
+        keeps serving.  Returns the swap summary:
+        {"materialized": [vid], "reused": [vid], "dropped": [prev_vid]}.
+        """
+        from repro.views.materializer import materialize_state_delta
+
+        extents, device, infos, reused, fresh, dropped = \
+            materialize_state_delta(state, self.store, self.state,
+                                    self.extents, self.infos,
+                                    self.device_views)
+        self.state = state
+        self.groups = groups or {q.name: [q.name] for q in state.queries}
+        self._queries = {q.name: q for q in state.queries}
+        self.extents, self.device_views, self.infos = extents, device, infos
+        self._build_dag()
+        self.workload = WorkloadExecutor(
+            self.dag, self.store.stats, self.infos, safety=self._safety,
+            use_pallas=self._use_pallas, max_retries=self._max_retries,
+            cap_planner=self._cap_planner,
+        )
+        self._results = None
+        self.__fns = None
+        return {"materialized": sorted(fresh), "reused": sorted(reused),
+                "dropped": dropped}
 
     @property
     def _fns(self):

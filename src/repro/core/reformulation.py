@@ -78,6 +78,33 @@ def reformulate(cq: CQ, schema: RDFSchema, type_id: int,
     ]
 
 
+def infer_type_id(queries: list[CQ], schema: RDFSchema) -> int | None:
+    """Infer the rdf:type predicate id from workload + schema shape.
+
+    A type atom is (?s, type, Class): its predicate is a constant the
+    schema does NOT know as a property, and its object is a constant the
+    schema DOES know as a class.  Returns the id when exactly one
+    predicate qualifies across the workload, else None (ambiguous or no
+    evidence — the caller must be told explicitly)."""
+    classes: set[int] = set(schema.domain.values()) | set(schema.range_.values())
+    for c, parents in schema.subclass.items():
+        classes.add(c)
+        classes |= parents
+    props: set[int] = set(schema.domain) | set(schema.range_)
+    for p, parents in schema.subprop.items():
+        props.add(p)
+        props |= parents
+    candidates: set[int] = set()
+    for q in queries:
+        for atom in q.atoms:
+            if (isinstance(atom.p, Const) and isinstance(atom.o, Const)
+                    and atom.o.id in classes and atom.p.id not in props):
+                candidates.add(atom.p.id)
+    if len(candidates) == 1:
+        return candidates.pop()
+    return None
+
+
 def reformulate_workload(queries: list[CQ], schema: RDFSchema | None, type_id: int,
                          max_reformulations: int = DEFAULT_MAX_REFORMULATIONS
                          ) -> tuple[list[CQ], dict[str, list[str]]]:

@@ -33,6 +33,9 @@ class SearchConfig:
     allow_predicate_cut: bool = False
     stop_fully_relaxed: bool = True
     weights: QualityWeights = field(default_factory=QualityWeights)
+    # warm-start seed: when set, the navigator resumes from this state
+    # instead of the initial_state it is handed (TuningSession.retune)
+    initial: State | None = None
 
 
 @dataclass
@@ -65,6 +68,8 @@ def search(initial: State, stats: Statistics, cfg: SearchConfig) -> SearchResult
         "beam": _beam,
         "anneal": _anneal,
     }[cfg.strategy]
+    if cfg.initial is not None:
+        initial = cfg.initial
     t0 = time.monotonic()
     result = fn(initial, stats, cfg, t0)
     result.elapsed_s = time.monotonic() - t0

@@ -72,6 +72,23 @@ class State:
         return "\n".join(lines)
 
 
+def _materialize_exactly(state_views: dict[int, View],
+                         rewritings: dict[str, Plan],
+                         q: CQ, nid: int) -> int:
+    """Add q's own full-projection view + trivial rewriting (the paper's
+    initial-state shape for one query); returns the next free view id."""
+    view_cq = full_projection(q.atoms, name=f"v_{q.name}")
+    state_views[nid] = View(id=nid, cq=view_cq)
+    head_names = tuple(h.name for h in view_cq.head)
+    ref = ViewRef(nid, head_names)
+    plan: Plan = ref
+    q_head = tuple(h.name for h in q.head)
+    if q_head != head_names:
+        plan = Project(ref, q_head)
+    rewritings[q.name] = plan
+    return nid + 1
+
+
 def initial_state(queries: list[CQ]) -> State:
     """The paper's initial state: materialize exactly the workload.
 
@@ -84,16 +101,35 @@ def initial_state(queries: list[CQ]) -> State:
     for q in queries:
         assert q.name, "workload queries must be named"
         assert q.name not in rewritings, f"duplicate query name {q.name}"
-        view_cq = full_projection(q.atoms, name=f"v_{q.name}")
-        v = View(id=nid, cq=view_cq)
-        views[nid] = v
-        head_names = tuple(h.name for h in view_cq.head)
-        ref = ViewRef(nid, head_names)
-        plan: Plan = ref
-        q_head = tuple(h.name for h in q.head)
-        if q_head != head_names:
-            plan = Project(ref, q_head)
-        rewritings[q.name] = plan
-        nid += 1
+        nid = _materialize_exactly(views, rewritings, q, nid)
     return State(views=views, rewritings=rewritings, queries=tuple(queries),
                  next_view_id=nid)
+
+
+def graft_queries(state: State, queries: list[CQ]) -> State:
+    """Evolve a tuned state's workload: each new query enters in its
+    initial-state shape (own view, trivial rewriting) next to the
+    already-relaxed views — the warm-start seed for an incremental
+    retune."""
+    views = dict(state.views)
+    rewritings = dict(state.rewritings)
+    nid = state.next_view_id
+    for q in queries:
+        if not q.name:
+            raise ValueError("workload queries must be named")
+        if q.name in rewritings:
+            raise ValueError(f"duplicate query name {q.name!r}")
+        nid = _materialize_exactly(views, rewritings, q, nid)
+    return replace(state, views=views, rewritings=rewritings,
+                   queries=state.queries + tuple(queries), next_view_id=nid)
+
+
+def drop_queries(state: State, names: set[str]) -> State:
+    """Remove queries from a tuned state; views only they referenced are
+    garbage-collected (their extents become droppable dead weight)."""
+    missing = names - {q.name for q in state.queries}
+    if missing:
+        raise KeyError(f"unknown queries: {sorted(missing)}")
+    rewritings = {n: p for n, p in state.rewritings.items() if n not in names}
+    queries = tuple(q for q in state.queries if q.name not in names)
+    return replace(state, rewritings=rewritings, queries=queries).gc()

@@ -2,16 +2,22 @@
 
 Workload Processor (RDFS reformulation) -> initial state -> States
 Navigator (search) -> View Materializer -> Query Executor.
+
+`tune()` is the original one-shot entry point, kept as a compatibility
+shim: it runs a throwaway `repro.api.TuningSession` (retune + apply)
+and repackages the result as a `WizardReport`.  New code should hold a
+session instead — it supports incremental re-tuning and online view
+swaps that a one-shot call cannot.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 
 from repro.core.executor import QueryExecutor
-from repro.core.quality import QualityBreakdown, QualityWeights, quality
-from repro.core.reformulation import reformulate_workload
-from repro.core.search import SearchConfig, SearchResult, search
-from repro.core.state import State, initial_state
+from repro.core.quality import QualityBreakdown
+from repro.core.search import SearchConfig, SearchResult
+from repro.core.state import State
 from repro.rdf.schema import RDFSchema
 from repro.rdf.triples import TripleStore
 
@@ -49,18 +55,21 @@ class WizardReport:
 
 def tune(store: TripleStore, workload, schema: RDFSchema | None = None,
          type_id: int | None = None, cfg: WizardConfig | None = None) -> WizardReport:
-    cfg = cfg or WizardConfig()
-    if cfg.use_schema and schema is not None:
-        assert type_id is not None, "type_id required for schema reformulation"
-        members, groups = reformulate_workload(
-            list(workload), schema, type_id, cfg.max_reformulations
-        )
-    else:
-        members, groups = list(workload), {q.name: [q.name] for q in workload}
+    """One-shot wizard run (deprecated): prefer `repro.api.TuningSession`.
 
-    init = initial_state(members)
-    init_q = quality(init, store.stats, cfg.search.weights)
-    result = search(init, store.stats, cfg.search)
-    executor = QueryExecutor(store, result.best, groups, use_pallas=cfg.use_pallas)
-    return WizardReport(initial=init, initial_quality=init_q, result=result,
-                        executor=executor, groups=groups)
+    `type_id=None` with a schema infers the rdf:type predicate from the
+    workload when unambiguous; a `ValueError` is raised otherwise.
+    """
+    from repro.api.session import TuningSession  # lazy: avoids import cycle
+
+    warnings.warn(
+        "repro.core.wizard.tune() is a one-shot shim; use "
+        "repro.api.TuningSession for incremental re-tuning",
+        DeprecationWarning, stacklevel=2)
+    session = TuningSession(store, workload=list(workload), schema=schema,
+                            type_id=type_id, cfg=cfg)
+    rep = session.retune()
+    session.apply()
+    return WizardReport(initial=rep.seed, initial_quality=rep.seed_quality,
+                        result=rep.result, executor=session.executor,
+                        groups=session.groups)

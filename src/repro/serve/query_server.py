@@ -10,6 +10,11 @@ store or state changes (`invalidate`).
 
 Union semantics over RDFS reformulation groups are applied per request,
 matching `QueryExecutor.answer_group`.
+
+A server bound to a `repro.api.TuningSession` can retune ONLINE: the
+session's `apply()` hot-swaps the compiled workload program on the same
+executor object this server holds, so `retune_online()` evolves the
+workload behind the batched endpoint without a server restart.
 """
 from __future__ import annotations
 
@@ -28,23 +33,61 @@ class ServeStats:
     recompiles: int = 0
     shared_nodes: int = 0
     node_reuse_count: int = 0
+    retunes: int = 0
 
     def as_dict(self) -> dict:
         return dict(self.__dict__)
 
 
 class QueryServer:
-    def __init__(self, executor: QueryExecutor):
+    def __init__(self, executor: QueryExecutor, session=None):
         self.executor = executor
+        self.session = session
         self.stats = ServeStats()
 
     @classmethod
     def from_tuned(cls, store, workload, schema=None, type_id=None, cfg=None):
-        """Convenience: run the wizard, serve through its executor."""
-        from repro.core.wizard import tune
+        """Convenience: one retained tuning session, served.  The server
+        can retune online (unlike the deprecated one-shot `tune()`)."""
+        from repro.api.session import TuningSession
 
-        rep = tune(store, workload, schema, type_id, cfg)
-        return cls(rep.executor)
+        session = TuningSession(store, workload=list(workload), schema=schema,
+                                type_id=type_id, cfg=cfg)
+        session.retune()
+        session.apply()
+        return cls(session.executor, session=session)
+
+    # ------------------------------------------------------------------
+    def retune_online(self, add=(), remove=()) -> dict:
+        """Evolve the workload behind the endpoint: add/remove queries,
+        warm-retune, delta-swap the view set — all while this server
+        object keeps serving (next batch sees the new configuration).
+        The whole edit is validated before any of it is applied, so a
+        bad request leaves the workload untouched.
+        Returns {"retune": RetuneReport, "apply": ApplyReport}."""
+        if self.session is None:
+            raise RuntimeError(
+                "retune_online needs a session-bound server; construct via "
+                "TuningSession.serve() or QueryServer.from_tuned()")
+        current = {q.name for q in self.session.workload}
+        unknown = set(remove) - current
+        if unknown:
+            raise KeyError(f"unknown queries: {sorted(unknown)}")
+        surviving = current - set(remove)
+        for q in add:
+            if not q.name:
+                raise ValueError("workload queries must be named")
+            if q.name in surviving:
+                raise ValueError(f"duplicate query name {q.name!r}")
+            surviving.add(q.name)
+        for name in remove:
+            self.session.remove_query(name)
+        for q in add:
+            self.session.add_query(q)
+        retune = self.session.retune()
+        apply_ = self.session.apply()  # hot swap: self.executor stays valid
+        self.stats.retunes += 1
+        return {"retune": retune, "apply": apply_}
 
     # ------------------------------------------------------------------
     def answer_batch(self, names: list[str]) -> list[set[tuple[int, ...]] | None]:
@@ -77,6 +120,10 @@ class QueryServer:
         store), and drop cached results so the next batch re-runs the
         fused program against fresh data."""
         self.executor.refresh(store)
+        if self.session is not None:
+            # keep the session on the serving store: later retunes search
+            # with its statistics, and save() persists its triple table
+            self.session.store = self.executor.store
 
     def _sync_telemetry(self) -> None:
         t = self.executor.telemetry()

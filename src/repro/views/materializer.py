@@ -61,6 +61,81 @@ def materialize_state(state: State, store: TripleStore):
     return extents, device, infos
 
 
+def materialize_state_delta(state: State, store: TripleStore,
+                            prev_state: State,
+                            prev_extents: dict[int, R.Relation],
+                            prev_infos: dict[int, RelInfo] | None = None,
+                            prev_device: dict[int, E.PRel] | None = None):
+    """Delta path for an online view swap: materialize ONLY the views of
+    `state` whose canonical key is new; views isomorphic to a previous
+    view (same key, possibly different id / variable names / column
+    order) reuse the old extent through a column permutation.  Under an
+    identity permutation (the common case: the view simply survived the
+    retune) the previous device buffer is carried over as-is — no host
+    copy, no re-upload.
+
+    Returns (extents, device, infos, reused, fresh, dropped):
+      reused:  {new_vid: prev_vid} carried over without evaluation
+      fresh:   [new_vid] actually materialized
+      dropped: [prev_vid] dead extents the swap discards
+    """
+    from repro.core.queries import isomorphism
+
+    # multiset match: one previous extent satisfies one new view
+    by_key: dict = {}
+    for pvid in sorted(prev_state.views):
+        by_key.setdefault(prev_state.views[pvid].cq.canonical_key(),
+                          []).append(pvid)
+
+    extents: dict[int, R.Relation] = {}
+    device: dict[int, E.PRel] = {}
+    infos: dict[int, RelInfo] = {}
+    reused: dict[int, int] = {}
+    fresh: list[int] = []
+    for vid, view in state.views.items():
+        candidates = by_key.get(view.cq.canonical_key())
+        pvid = candidates.pop(0) if candidates else None
+        if pvid is not None:
+            prev_view = prev_state.views[pvid]
+            iso = isomorphism(prev_view.cq, view.cq)  # prev var -> new var
+            assert iso is not None, "equal canonical keys must be isomorphic"
+            old_idx = {h.name: i for i, h in enumerate(prev_view.cq.head)}
+            inv = {nv: pv for pv, nv in iso.items()}
+            perm = [old_idx[inv[h].name] for h in view.cq.head]
+            prev_rel = prev_extents[pvid]
+            identity = perm == list(range(len(perm)))
+            if identity and tuple(h.name for h in view.cq.head) == prev_rel.cols:
+                ext = prev_rel
+            else:
+                rows = prev_rel.rows[:, perm] if len(prev_rel.rows) else \
+                    prev_rel.rows.reshape(0, len(perm))
+                ext = R.Relation(np.ascontiguousarray(rows),
+                                 tuple(h.name for h in view.cq.head))
+            reused[vid] = pvid
+            if prev_infos is not None and pvid in prev_infos:
+                pinfo = prev_infos[pvid]
+                distinct = {h.name: pinfo.distinct[inv[h].name]
+                            for h in view.cq.head}
+                infos[vid] = RelInfo(pinfo.rows, distinct)
+            else:
+                infos[vid] = measured_info(ext)
+            if identity and prev_device is not None and pvid in prev_device:
+                device[vid] = prev_device[pvid]  # buffer survives as-is
+            else:
+                device[vid] = E.make_prel(
+                    ext.rows, capacity_for(len(ext.rows), safety=1.0))
+        else:
+            ext = materialize_view(view.cq, store)
+            fresh.append(vid)
+            infos[vid] = measured_info(ext)
+            device[vid] = E.make_prel(
+                ext.rows, capacity_for(len(ext.rows), safety=1.0))
+        extents[vid] = ext
+    matched = set(reused.values())
+    dropped = [pvid for pvid in sorted(prev_state.views) if pvid not in matched]
+    return extents, device, infos, reused, fresh, dropped
+
+
 def materialize_state_device(state: State, store: TripleStore,
                              safety: float = 4.0, use_pallas: bool = False,
                              max_retries: int = 12):

@@ -1,0 +1,344 @@
+"""TuningSession lifecycle: warm-started incremental retuning, delta
+view swap, session persistence, online serving, tune() compatibility."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import (QualityWeights, SearchConfig, TuningSession,
+                       WizardConfig)
+from repro.api import serde
+from repro.core.reformulation import infer_type_id
+from repro.core.search import search
+from repro.core.state import initial_state
+from repro.core.wizard import WizardReport, tune
+from repro.rdf.generator import generate, lubm_workload
+from repro.views import materializer
+
+
+@pytest.fixture(scope="module")
+def uni():
+    return generate(n_universities=1, seed=0, dept_per_univ=2,
+                    prof_per_dept=4, stud_per_dept=12, course_per_dept=5)
+
+
+@pytest.fixture(scope="module")
+def wl(uni):
+    return lubm_workload(uni.dictionary)
+
+
+def make_cfg():
+    # weights under which the navigator genuinely iterates (fusion pays)
+    return WizardConfig(search=SearchConfig(
+        strategy="greedy", max_states=3000,
+        weights=QualityWeights(w_exec=1.0, w_maint=1.0, w_space=1.0)))
+
+
+@pytest.fixture(scope="module")
+def cold_full(uni, wl):
+    """Cold tune over the FULL workload — the warm path's baseline."""
+    s = TuningSession(uni.store, wl, schema=uni.schema, type_id=uni.type_id,
+                      cfg=make_cfg())
+    return s.retune()
+
+
+# ----------------------------------------------------------------------
+# lifecycle: cold retune -> apply -> evolve -> warm retune -> delta apply
+# ----------------------------------------------------------------------
+def test_cold_retune_then_apply_answers_workload(uni, wl):
+    s = TuningSession(uni.store, wl[:5], schema=uni.schema,
+                      type_id=uni.type_id, cfg=make_cfg())
+    rep = s.retune()
+    assert not rep.warm and rep.added == [] and rep.removed == []
+    ap = s.apply()
+    assert ap.full and sorted(ap.materialized) == sorted(s.best.views)
+    assert ap.reused == [] and ap.dropped == []
+    for q in wl[:5]:
+        assert s.answer(q.name) == s.executor.answer_group_direct(q.name), q.name
+
+
+def test_warm_retune_explores_strictly_fewer_states(uni, wl, cold_full):
+    """Acceptance: on a workload perturbed by one added query, warm
+    retune explores strictly fewer states than the cold tune while
+    reaching an equal-or-better quality total."""
+    s = TuningSession(uni.store, wl[:5], schema=uni.schema,
+                      type_id=uni.type_id, cfg=make_cfg())
+    s.retune()
+    s.add_query(wl[5])
+    rep = s.retune()
+    assert rep.warm and rep.removed == []
+    assert len(rep.added) >= 1  # q6's reformulation members grafted
+    assert rep.result.explored < cold_full.result.explored
+    assert (rep.result.best_quality.total
+            <= cold_full.result.best_quality.total + 1e-9)
+
+
+def test_apply_delta_materializes_only_new_views(uni, wl, monkeypatch):
+    s = TuningSession(uni.store, wl[:5], schema=uni.schema,
+                      type_id=uni.type_id, cfg=make_cfg())
+    s.retune()
+    s.apply()
+    applied_keys = [v.cq.canonical_key() for v in s.best.views.values()]
+
+    calls = []
+    real = materializer.materialize_view
+
+    def counting(cq, store):
+        calls.append(cq.name)
+        return real(cq, store)
+
+    monkeypatch.setattr(materializer, "materialize_view", counting)
+    s.add_query(wl[5])
+    s.retune()
+    ap = s.apply()
+    assert not ap.full
+    # only the genuinely new views were evaluated...
+    assert len(calls) == len(ap.materialized)
+    assert 0 < len(ap.materialized) < len(s.best.views)
+    assert len(ap.reused) >= 1
+    assert sorted(ap.materialized + ap.reused) == sorted(s.best.views)
+    # ...and reuse really keyed on the canonical form
+    remaining = list(applied_keys)
+    for vid in ap.reused:
+        remaining.remove(s.best.views[vid].cq.canonical_key())
+    for vid in ap.materialized:
+        assert s.best.views[vid].cq.canonical_key() not in remaining
+    # the swapped executor still answers the whole workload exactly
+    for q in wl:
+        assert s.answer(q.name) == s.executor.answer_group_direct(q.name), q.name
+
+
+def test_remove_query_drops_dead_views(uni, wl):
+    s = TuningSession(uni.store, wl[:3], schema=uni.schema,
+                      type_id=uni.type_id, cfg=make_cfg())
+    s.retune()
+    s.apply()
+    s.remove_query("q1")
+    rep = s.retune()
+    assert rep.warm and len(rep.removed) >= 1
+    ap = s.apply()
+    assert len(ap.dropped) >= 1
+    assert "q1" not in s.groups
+    for q in wl[1:3]:
+        assert s.answer(q.name) == s.executor.answer_group_direct(q.name), q.name
+
+
+def test_workload_evolution_guards(uni, wl):
+    s = TuningSession(uni.store, cfg=make_cfg())
+    with pytest.raises(ValueError, match="empty workload"):
+        s.retune()
+    with pytest.raises(RuntimeError, match="retune"):
+        s.apply()
+    s.add_query(wl[0])
+    with pytest.raises(ValueError, match="duplicate"):
+        s.add_query(wl[0])
+    with pytest.raises(KeyError):
+        s.remove_query("nope")
+
+
+# ----------------------------------------------------------------------
+# warm-start plumbing in the navigator itself
+# ----------------------------------------------------------------------
+def test_search_config_initial_overrides_seed(uni, wl):
+    from dataclasses import replace
+
+    cfg = make_cfg().search
+    st_small = initial_state(wl[:2])
+    st_big = initial_state(wl[:5])
+    # the positional seed is ignored when cfg.initial is set
+    res = search(st_small, uni.store.stats, replace(cfg, initial=st_big))
+    baseline = search(st_big, uni.store.stats, cfg)
+    assert res.best.key() == baseline.best.key()
+    assert res.explored == baseline.explored
+    assert {q.name for q in res.best.queries} == \
+        {q.name for q in st_big.queries}
+
+
+# ----------------------------------------------------------------------
+# persistence
+# ----------------------------------------------------------------------
+def test_save_load_roundtrip_resumes_retuning(uni, wl, tmp_path, cold_full):
+    cfg = make_cfg()
+    s = TuningSession(uni.store, wl[:5], schema=uni.schema,
+                      type_id=uni.type_id, cfg=cfg)
+    s.retune()
+    path = s.save(str(tmp_path))
+    assert (tmp_path / "step_00000000" / "session.json").exists()
+    assert path.endswith("step_00000000")
+
+    s2 = TuningSession.load(str(tmp_path), cfg=cfg)
+    assert [q.name for q in s2.workload] == [q.name for q in s.workload]
+    assert s2.best.key() == s.best.key()
+    assert np.array_equal(s2.store.triples, uni.store.triples)
+    assert s2.store.dictionary.lookup("ub:takesCourse") == \
+        uni.dictionary.lookup("ub:takesCourse")
+    # resumed session warm-starts: strictly fewer states than cold
+    s2.add_query(wl[5])
+    rep = s2.retune()
+    assert rep.warm
+    assert rep.result.explored < cold_full.result.explored
+    s2.apply()
+    for q in wl:
+        assert s2.answer(q.name) == s2.executor.answer_group_direct(q.name), q.name
+
+
+def test_state_serde_roundtrip(uni, wl):
+    s = TuningSession(uni.store, wl[:4], schema=uni.schema,
+                      type_id=uni.type_id, cfg=make_cfg())
+    rep = s.retune()
+    st = rep.result.best
+    back = serde.state_from_json(serde.state_to_json(st))
+    assert back.key() == st.key()
+    assert back.rewritings == st.rewritings
+    assert back.next_view_id == st.next_view_id
+    assert [q.name for q in back.queries] == [q.name for q in st.queries]
+    assert [q.weight for q in back.queries] == [q.weight for q in st.queries]
+
+
+def test_load_missing_checkpoint_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        TuningSession.load(str(tmp_path / "void"))
+
+
+def test_load_restores_config_and_objective(uni, wl, tmp_path):
+    s = TuningSession(uni.store, wl[:3], schema=uni.schema,
+                      type_id=uni.type_id, cfg=make_cfg())
+    s.retune()
+    s.save(str(tmp_path))
+    s2 = TuningSession.load(str(tmp_path))  # no cfg=: saved one restored
+    w = s2.cfg.search.weights
+    assert (w.w_exec, w.w_maint, w.w_space) == (1.0, 1.0, 1.0)
+    assert s2.cfg.search.strategy == "greedy"
+    assert s2.cfg.search.max_states == 3000
+    # same objective => identical recomputed quality for the saved best
+    assert abs(s2.best_quality.total - s.best_quality.total) < 1e-6
+
+
+def test_delta_swap_carries_device_buffers(uni, wl):
+    """Surviving views under an identity permutation keep their device
+    buffers — reuse is not a host-side re-upload."""
+    s = TuningSession(uni.store, wl[:5], schema=uni.schema,
+                      type_id=uni.type_id, cfg=make_cfg())
+    s.retune()
+    s.apply()
+    before = {id(p) for p in s.executor.device_views.values()}
+    s.add_query(wl[5])
+    s.retune()
+    ap = s.apply()
+    carried = [vid for vid in ap.reused
+               if id(s.executor.device_views[vid]) in before]
+    assert carried, "identity-permutation reuse must carry buffers over"
+    for vid in ap.materialized:
+        assert id(s.executor.device_views[vid]) not in before
+
+
+# ----------------------------------------------------------------------
+# online serving
+# ----------------------------------------------------------------------
+def test_serve_retunes_online_behind_batched_endpoint(uni, wl):
+    s = TuningSession(uni.store, wl[:5], schema=uni.schema,
+                      type_id=uni.type_id, cfg=make_cfg())
+    srv = s.serve()
+    ex = srv.executor
+    names = [q.name for q in wl[:5]]
+    for name, ans in zip(names, srv.answer_batch(names)):
+        assert ans == ex.answer_group_direct(name), name
+    out = srv.retune_online(add=[wl[5]])
+    assert out["retune"].warm and not out["apply"].full
+    assert srv.executor is ex  # hot swap: same executor object serves on
+    assert srv.stats.retunes == 1
+    answers = srv.answer_batch(names + ["q6"])
+    assert all(a is not None for a in answers)
+    assert answers[-1] == ex.answer_group_direct("q6")
+    srv.retune_online(remove=["q1"])
+    assert srv.answer("q1") is None  # unknown now
+    assert srv.answer("q6") == ex.answer_group_direct("q6")
+
+
+def test_retune_online_validates_before_mutating(uni, wl):
+    s = TuningSession(uni.store, wl[:3], schema=uni.schema,
+                      type_id=uni.type_id, cfg=make_cfg())
+    srv = s.serve()
+    # invalid edit (adding a name that survives the removes): atomic no-op
+    with pytest.raises(ValueError, match="duplicate"):
+        srv.retune_online(remove=["q1"], add=[wl[1]])
+    assert {q.name for q in s.workload} == {"q1", "q2", "q3"}
+    with pytest.raises(KeyError):
+        srv.retune_online(remove=["never_there"])
+    assert srv.stats.retunes == 0
+    # the remove+re-add spelling of a weight change IS valid
+    srv.retune_online(remove=["q1"], add=[wl[0]])
+    assert srv.stats.retunes == 1
+
+
+def test_invalidate_keeps_session_on_serving_store(uni, wl):
+    from repro.rdf.triples import TripleStore
+
+    s = TuningSession(uni.store, wl[:3], schema=uni.schema,
+                      type_id=uni.type_id, cfg=make_cfg())
+    srv = s.serve()
+    t = uni.store.triples
+    smaller = TripleStore(t[: int(len(t) * 0.8)], uni.dictionary)
+    srv.invalidate(smaller)
+    assert s.store is smaller  # retune stats + save() follow the server
+    srv.retune_online(add=[wl[3]])
+    for q in wl[:4]:
+        assert srv.answer(q.name) == \
+            srv.executor.answer_group_direct(q.name), q.name
+
+
+def test_from_tuned_honors_subclass(uni, wl):
+    from repro.serve.query_server import QueryServer
+
+    class SubServer(QueryServer):
+        pass
+
+    srv = SubServer.from_tuned(uni.store, wl[:2], uni.schema, uni.type_id,
+                               make_cfg())
+    assert isinstance(srv, SubServer)
+    assert srv.session is not None
+    assert srv.answer("q1") == srv.executor.answer_group_direct("q1")
+
+
+# ----------------------------------------------------------------------
+# tune() compatibility shim
+# ----------------------------------------------------------------------
+def test_tune_old_signature_regression(uni, wl):
+    """Pin the original positional call shape + WizardReport fields."""
+    cfg = WizardConfig(search=SearchConfig(strategy="greedy", max_states=200))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        rep = tune(uni.store, wl, uni.schema, uni.type_id, cfg)
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    assert isinstance(rep, WizardReport)
+    assert rep.initial_quality.total >= rep.result.best_quality.total - 1e-9
+    assert rep.summary()
+    assert set(rep.groups) == {q.name for q in wl}
+    q = wl[0]
+    assert rep.executor.answer_group(q.name) == \
+        rep.executor.answer_group_direct(q.name)
+
+
+def test_tune_without_schema_keeps_working(uni, wl):
+    cfg = WizardConfig(search=SearchConfig(strategy="greedy", max_states=100),
+                       use_schema=False)
+    rep = tune(uni.store, wl[:2], None, None, cfg)
+    for q in wl[:2]:
+        assert rep.executor.answer_group(q.name) == \
+            rep.executor.answer_group_direct(q.name)
+
+
+def test_tune_infers_type_id_when_unambiguous(uni, wl):
+    cfg = WizardConfig(search=SearchConfig(strategy="greedy", max_states=100))
+    inferred = tune(uni.store, wl, uni.schema, None, cfg)
+    explicit = tune(uni.store, wl, uni.schema, uni.type_id, cfg)
+    assert inferred.result.best.key() == explicit.result.best.key()
+    assert infer_type_id(wl, uni.schema) == uni.type_id
+
+
+def test_tune_raises_value_error_when_type_id_unresolvable(uni, wl):
+    # q2's atoms are all schema properties: no type atom, no evidence
+    no_type_evidence = [wl[1]]
+    assert infer_type_id(no_type_evidence, uni.schema) is None
+    with pytest.raises(ValueError, match="type_id"):
+        tune(uni.store, no_type_evidence, uni.schema, None, WizardConfig())

@@ -95,9 +95,13 @@ def main(lines: list[str]) -> None:
 
     perq_us = time_us(run_per_query)
 
-    # fused path: one program for the whole workload
+    # fused path: one program for the whole workload.  The A/B leg runs
+    # unrolled — this benchmark isolates subplan sharing + single
+    # dispatch against per-query compilation at matched lowering; the
+    # bucketed lowering's compile-time scaling (and its per-run driver
+    # overhead) is measured separately in bench_compile_scale.
     dag = build_dag(plans)
-    wl = WorkloadExecutor(dag, uni.store.stats, {})
+    wl = WorkloadExecutor(dag, uni.store.stats, {}, mode="unrolled")
     t0 = time.perf_counter()
     wl.run(tt, {})  # compile + first run (adaptive driver)
     fused_compile_us = (time.perf_counter() - t0) * 1e6
@@ -108,6 +112,16 @@ def main(lines: list[str]) -> None:
         next(iter(roots.values())).n.block_until_ready()
 
     fused_us = time_us(run_fused)
+
+    # bucketed steady-state latency, for the record (same DAG/answers)
+    wl_b = WorkloadExecutor(build_dag(plans), uni.store.stats, {})
+    wl_b.run(tt, {})
+
+    def run_bucketed():
+        roots = wl_b.run(tt, {})
+        next(iter(roots.values())).n.block_until_ready()
+
+    bucketed_us = time_us(run_bucketed)
     st = dag.stats()
     workload_speedup = perq_us / max(fused_us, 1e-9)
 
@@ -119,6 +133,8 @@ def main(lines: list[str]) -> None:
                       f"hit_rate={st['hit_rate']:.2f}"))
     lines.append(emit("query_eval.workload.speedup", 0.0,
                       f"{workload_speedup:.2f}x"))
+    lines.append(emit("query_eval.workload.bucketed", bucketed_us,
+                      f"buckets={wl_b.telemetry()['buckets']}"))
 
     assert fused_compiles < perq_compiles, (
         "fused executor must compile strictly fewer programs")
@@ -133,6 +149,9 @@ def main(lines: list[str]) -> None:
         "fused_compiles": fused_compiles,
         "fused_workload_us": fused_us,
         "fused_recompiles": wl.recompiles,
+        "bucketed_workload_us": bucketed_us,
+        "bucketed_buckets": wl_b.telemetry()["buckets"],
+        "bucketed_compile_s": wl_b.telemetry()["bucket_compile_seconds"],
         "dag_nodes": st["dag_nodes"],
         "tree_nodes": st["tree_nodes"],
         "shared_nodes": st["shared_nodes"],

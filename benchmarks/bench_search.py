@@ -1,11 +1,12 @@
 """Paper table 1 (demo §4): search strategies — states explored, quality
 reached, wall time.  Validates the claim that heuristics prune the
-above-exponential space with bounded quality loss."""
+above-exponential space with bounded quality loss.  Lands in
+BENCH_search.json."""
 from __future__ import annotations
 
 import time
 
-from benchmarks.bench_common import emit
+from benchmarks.bench_common import emit, quick_mode, write_bench_json
 from repro.core.quality import quality
 from repro.core.search import SearchConfig, search
 from repro.core.state import initial_state
@@ -13,6 +14,7 @@ from repro.rdf.generator import generate, lubm_workload
 
 
 def main(lines: list[str]) -> None:
+    quick = quick_mode()
     uni = generate(n_universities=1, seed=0, dept_per_univ=2,
                    prof_per_dept=4, stud_per_dept=15, course_per_dept=6)
     workload = lubm_workload(uni.dictionary)
@@ -20,15 +22,25 @@ def main(lines: list[str]) -> None:
     q0 = quality(st0, uni.store.stats)
     lines.append(emit("search.initial_state", 0.0,
                       f"total={q0.total:.0f};views={len(st0.views)}"))
-    for strat, budget in [("exhaustive_dfs", 2000), ("best_first", 2000),
-                          ("greedy", 2000), ("beam", 2000), ("anneal", 2000)]:
+    budget = 400 if quick else 2000
+    max_s = 15 if quick else 45
+    metrics: dict = {"quick": int(quick), "initial_total": q0.total,
+                     "initial_views": len(st0.views)}
+    for strat in ["exhaustive_dfs", "best_first", "greedy", "beam", "anneal"]:
         t0 = time.perf_counter()
         res = search(st0, uni.store.stats,
                      SearchConfig(strategy=strat, max_states=budget,
-                                  max_seconds=45))
+                                  max_seconds=max_s))
         dt = (time.perf_counter() - t0) * 1e6
+        improvement = q0.total / max(res.best_quality.total, 1e-9)
         lines.append(emit(
             f"search.{strat}", dt,
             f"explored={res.explored};best={res.best_quality.total:.0f};"
             f"views={len(res.best.views)};"
-            f"improvement={q0.total / max(res.best_quality.total, 1e-9):.2f}x"))
+            f"improvement={improvement:.2f}x"))
+        metrics[f"{strat}_us"] = dt
+        metrics[f"{strat}_explored"] = res.explored
+        metrics[f"{strat}_best_total"] = res.best_quality.total
+        metrics[f"{strat}_views"] = len(res.best.views)
+        metrics[f"{strat}_improvement"] = improvement
+    write_bench_json("search", metrics)

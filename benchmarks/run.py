@@ -2,6 +2,7 @@
 
   search          demo §4 / TR: strategies vs states explored vs quality
   query_eval      demo finale: TT vs materialized views latency
+  compile_scale   bucketed executor: compile time vs workload size
   retune          TuningSession: cold tune() vs warm retune()+delta apply()
   reformulation   §3 Workload Processor: union sizes + completeness gain
   maintenance     quality m-term: incremental vs recompute
@@ -19,9 +20,9 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (bench_kernels, bench_lm_step, bench_maintenance,
-                            bench_query_eval, bench_reformulation,
-                            bench_retune, bench_search)
+    from benchmarks import (bench_compile_scale, bench_kernels, bench_lm_step,
+                            bench_maintenance, bench_query_eval,
+                            bench_reformulation, bench_retune, bench_search)
 
     args = sys.argv[1:]
     if "--quick" in args:  # CI smoke: small datasets, few iterations
@@ -31,6 +32,7 @@ def main() -> None:
     suites = {
         "search": bench_search.main,
         "query_eval": bench_query_eval.main,
+        "compile_scale": bench_compile_scale.main,
         "retune": bench_retune.main,
         "reformulation": bench_reformulation.main,
         "maintenance": bench_maintenance.main,

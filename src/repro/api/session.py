@@ -197,7 +197,7 @@ class TuningSession:
     # ------------------------------------------------------------------
     # apply: delta view swap
     # ------------------------------------------------------------------
-    def apply(self) -> ApplyReport:
+    def apply(self, warm: bool = True) -> ApplyReport:
         """Install the last retune's best configuration.
 
         The first apply materializes everything and compiles the fused
@@ -205,6 +205,15 @@ class TuningSession:
         canonical key changed are materialized, surviving extents are
         reused (column-permuted), dead extents dropped, and the compiled
         workload program is hot-swapped on the SAME executor object.
+
+        With `warm=True` (default) the incoming program is pre-warmed
+        before apply returns: every shape-bucket body is compiled —
+        mostly hits in the persistent compile cache, since a retuned
+        workload largely reuses the old program's shapes — capacities
+        the old program learned adaptively are carried over, and the
+        workload results are cached.  A `QueryServer` holding this
+        executor therefore never pays a cold compile on the serving
+        path after a retune()+apply() hot swap.
         """
         if self._best is None:
             raise RuntimeError("retune() before apply()")
@@ -212,10 +221,13 @@ class TuningSession:
             self.executor = QueryExecutor(self.store, self._best,
                                           self._groups,
                                           use_pallas=self.cfg.use_pallas)
+            if warm:
+                self.executor.warmup()
             report = ApplyReport(materialized=sorted(self._best.views),
                                  reused=[], dropped=[], full=True)
         else:
-            swap = self.executor.swap_state(self._best, self._groups)
+            swap = self.executor.swap_state(self._best, self._groups,
+                                            warm=warm)
             report = ApplyReport(full=False, **swap)
         self._applied = self._best
         return report

@@ -42,7 +42,8 @@ class QueryExecutor:
                  groups: dict[str, list[str]] | None = None,
                  use_pallas: bool = False, safety: float = 4.0,
                  max_retries: int = 12, cap_planner=None,
-                 device_materialize: bool = False):
+                 device_materialize: bool = False,
+                 workload_mode: str = "bucketed"):
         self.store = store
         self.state = state
         self.groups = groups or {q.name: [q.name] for q in state.queries}
@@ -51,6 +52,7 @@ class QueryExecutor:
         self._max_retries = max_retries
         self._cap_planner = cap_planner
         self._device_materialize = device_materialize
+        self._workload_mode = workload_mode
         self._queries = {q.name: q for q in state.queries}
 
         # ---- fused workload path: one DAG + one jitted program --------
@@ -71,9 +73,11 @@ class QueryExecutor:
                 device_plans[name] = plan
         self.dag = build_dag(device_plans)
 
-    def _load_device_state(self, store: TripleStore) -> None:
+    def _load_device_state(self, store: TripleStore,
+                           carry_caps: dict | None = None) -> None:
         """(Re)materialize views and upload TT indexes + rebuild the
-        fused executor against them."""
+        fused executor against them.  `carry_caps` seeds the new program
+        with capacities a previous one learned adaptively."""
         self.store = store
         if self._device_materialize:
             self.extents, self.device_views, self.infos = \
@@ -86,7 +90,8 @@ class QueryExecutor:
         self.workload = WorkloadExecutor(
             self.dag, store.stats, self.infos, safety=self._safety,
             use_pallas=self._use_pallas, max_retries=self._max_retries,
-            cap_planner=self._cap_planner,
+            cap_planner=self._cap_planner, mode=self._workload_mode,
+            carry_caps=carry_caps,
         )
         self._results: dict[str, np.ndarray] | None = None
 
@@ -95,22 +100,36 @@ class QueryExecutor:
         re-materializes every view extent, re-uploads the TT indexes,
         and recompiles the fused program against the fresh statistics.
         With no argument, refreshes device state from the current store
-        (e.g. after in-place mutation)."""
-        self._load_device_state(store if store is not None else self.store)
+        (e.g. after in-place mutation).  Capacities the old program
+        learned adaptively are carried into the new one."""
+        carry = self.workload.learned_caps()
+        self._load_device_state(store if store is not None else self.store,
+                                carry_caps=carry)
         self.__fns = None
 
     def swap_state(self, state: State,
-                   groups: dict[str, list[str]] | None = None) -> dict:
+                   groups: dict[str, list[str]] | None = None,
+                   warm: bool = True) -> dict:
         """Online view swap onto a retuned configuration: diff old vs new
         views by canonical key, materialize ONLY the genuinely new
         extents (reusing surviving ones through a column permutation),
         drop dead extents, and hot-swap the compiled workload program.
         The executor object stays valid throughout — a server holding it
-        keeps serving.  Returns the swap summary:
-        {"materialized": [vid], "reused": [vid], "dropped": [prev_vid]}.
+        keeps serving.
+
+        Capacities the outgoing program learned adaptively are carried
+        into the incoming one (keyed by DAG content key), so the fresh
+        program does not re-learn overflows the old one already healed.
+        With `warm=True` (default) the new program is pre-warmed before
+        the swap returns: every bucket body is compiled (mostly
+        persistent-cache hits) and the workload results are cached, so
+        the serving path never pays a cold compile.  Returns the swap
+        summary: {"materialized": [vid], "reused": [vid],
+        "dropped": [prev_vid]}.
         """
         from repro.views.materializer import materialize_state_delta
 
+        carry = self.workload.learned_caps()
         extents, device, infos, reused, fresh, dropped = \
             materialize_state_delta(state, self.store, self.state,
                                     self.extents, self.infos,
@@ -123,12 +142,22 @@ class QueryExecutor:
         self.workload = WorkloadExecutor(
             self.dag, self.store.stats, self.infos, safety=self._safety,
             use_pallas=self._use_pallas, max_retries=self._max_retries,
-            cap_planner=self._cap_planner,
+            cap_planner=self._cap_planner, mode=self._workload_mode,
+            carry_caps=carry,
         )
         self._results = None
         self.__fns = None
+        if warm:
+            self.warmup()
         return {"materialized": sorted(fresh), "reused": sorted(reused),
                 "dropped": dropped}
+
+    def warmup(self) -> None:
+        """Compile every bucket body of the current program and cache
+        the workload results, so the next `answer*` call is pure reads —
+        the pre-warming half of the hot-swap contract."""
+        roots = self.workload.warmup(self.tt, self.device_views)
+        self._results = {name: E.to_numpy(rel) for name, rel in roots.items()}
 
     @property
     def _fns(self):

@@ -1,0 +1,550 @@
+"""Shape-bucketed lowering of a `WorkloadDAG`: one scanned body per bucket.
+
+The unrolled fused executor (`compile_workload`) traces one closure per
+DAG node, so XLA graph size — and compile time — grows linearly with the
+workload.  At 1000+ members that is the wall.  This module applies the
+scan-over-layers idiom (levanter's `Stacked`, SNIPPETS.md Snippet 1) to
+query plans: nodes are grouped into *shape buckets* by
+
+    (topological wave, operator kind, structural signature, capacity class)
+
+and each bucket executes as ONE `lax.scan` over its members' stacked
+operands.  The per-element constants (scan prefix/residual bindings,
+filter values) become data; the structure (column positions, join pairs,
+buffer capacities) stays static, so XLA traces and compiles each bucket
+body exactly once regardless of how many workload members share it.
+Compile time therefore scales with the number of *distinct shapes* in
+the workload, not with the number of queries.
+
+Bucket bodies are compiled ahead-of-time (`jax.jit(...).lower().compile()`)
+through a process-global `CompileCache` keyed by (kind, static spec,
+operand shapes).  The cache persists across program rebuilds — a
+`TuningSession.retune()+apply()` hot swap whose new DAG reuses old shapes
+pays zero cold compiles on the serving path — and it gives the adaptive
+overflow driver bucket-scoped recompiles: promoting one bucket to the
+next capacity class invalidates only that bucket's body (plus any
+consumer whose operand shape actually changed); every other body is a
+cache hit.
+
+Capacity classes are powers of two (`cost.capacity_for` /
+`cost.promote_capacity`).  Consumers pad child buffers up to their
+bucket's per-slot maximum capacity (padded rows are `-1`-scrubbed and
+sit beyond the valid count, so operators never see them), which keeps a
+bucket batchable even after one producer bucket has been promoted past
+its siblings.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.query import cost as cost_mod
+from repro.query import engine as E
+from repro.query.dag import WorkloadDAG
+
+CAP_CEIL = 1 << 22
+
+
+# ----------------------------------------------------------------------
+# persistent compile cache
+# ----------------------------------------------------------------------
+class CompileCache:
+    """Process-global cache of AOT-compiled bucket bodies.
+
+    Keyed by (kind, static signature, operand shape/dtype tuple): the
+    key pins everything that affects the traced program, so an entry is
+    valid for any executor in the process — rebuilt programs after a
+    view hot swap reuse every body whose shape survived.
+    """
+
+    def __init__(self) -> None:
+        self.entries: dict = {}
+        self.hits = 0
+        self.misses = 0
+        self.compile_seconds = 0.0
+
+    def get(self, key, build_fn, arg_specs):
+        """Return (compiled, cached, seconds): `compiled` is an AOT
+        executable accepting concrete arrays of `arg_specs` shapes."""
+        ent = self.entries.get(key)
+        if ent is not None:
+            self.hits += 1
+            return ent, True, 0.0
+        t0 = time.perf_counter()
+        compiled = jax.jit(build_fn()).lower(*arg_specs).compile()
+        dt = time.perf_counter() - t0
+        self.entries[key] = compiled
+        self.misses += 1
+        self.compile_seconds += dt
+        return compiled, False, dt
+
+    def clear(self) -> None:
+        self.entries.clear()
+        self.hits = 0
+        self.misses = 0
+        self.compile_seconds = 0.0
+
+    def stats(self) -> dict:
+        return {"entries": len(self.entries), "hits": self.hits,
+                "misses": self.misses,
+                "compile_seconds": self.compile_seconds}
+
+
+_CACHE = CompileCache()
+
+
+def compile_cache() -> CompileCache:
+    return _CACHE
+
+
+def clear_compile_cache() -> None:
+    """Drop every cached bucket body (benchmarks measuring cold-compile
+    scaling call this between sweep points)."""
+    _CACHE.clear()
+
+
+# ----------------------------------------------------------------------
+# bucket planning
+# ----------------------------------------------------------------------
+@dataclass
+class Bucket:
+    """One shape bucket: members share kind, structural signature and
+    capacity class, and sit on the same topological wave (so no member
+    depends on another — the batch is embarrassingly parallel and safe
+    to drive with one `lax.scan`)."""
+
+    kind: str
+    wave: int
+    static: tuple                 # structural signature (positions only)
+    cap: int                      # output capacity class (scan/join; 0 else)
+    node_ids: list[int] = field(default_factory=list)
+    promotions: int = 0
+    # scan buckets: per-member constants, stacked + uploaded at build time
+    pvals: jax.Array | None = None
+    rvals: jax.Array | None = None
+
+    @property
+    def label(self) -> str:
+        return f"w{self.wave}:{self.kind}:cap{self.cap}:n{len(self.node_ids)}"
+
+
+def node_waves(dag: WorkloadDAG) -> list[int]:
+    """Topological wave per node: leaves at 0, inner nodes one past
+    their deepest child.  Children always sit on strictly lower waves,
+    so same-wave nodes can never depend on each other."""
+    waves: list[int] = []
+    for node in dag.nodes:
+        if node.child_ids:
+            waves.append(1 + max(waves[c] for c in node.child_ids))
+        else:
+            waves.append(0)
+    return waves
+
+
+def plan_buckets(dag: WorkloadDAG, caps: list[int], scan_specs: dict,
+                 join_specs: dict) -> tuple[list[Bucket], dict[int, Bucket]]:
+    """Group every non-view node into shape buckets.
+
+    `caps` holds the planned output capacity class per node (scan/join;
+    unused entries 0).  `scan_specs[nid]` / `join_specs[nid]` hold the
+    static lowering parameters produced by `BucketedProgram`.  Returns
+    (buckets in execution order, node id -> bucket).
+    """
+    waves = node_waves(dag)
+    by_key: dict[tuple, Bucket] = {}
+    node_bucket: dict[int, Bucket] = {}
+    for node in dag.nodes:
+        if node.kind == "view":
+            continue
+        if node.kind == "scan":
+            idx_name, prefix, residual, takes, self_eq = scan_specs[node.id]
+            static = ("scan", idx_name, tuple(c for c, _ in prefix),
+                      tuple(c for c, _ in residual), takes, self_eq)
+            cap = caps[node.id]
+        elif node.kind == "filter":
+            ci, _value = node.spec
+            static = ("filter", ci, node.width)
+            cap = 0
+        elif node.kind == "join":
+            lcol, rcol, residual, keep_right = join_specs[node.id]
+            lw = dag.nodes[node.child_ids[0]].width
+            rw = dag.nodes[node.child_ids[1]].width
+            static = ("join", lcol, rcol, residual, keep_right, lw, rw)
+            cap = caps[node.id]
+        elif node.kind == "project":
+            idxs, dedupe = node.spec
+            cw = dag.nodes[node.child_ids[0]].width
+            static = ("project", idxs, dedupe, cw)
+            cap = 0
+        else:
+            raise TypeError(node.kind)
+        key = (waves[node.id], static, cap)
+        bucket = by_key.get(key)
+        if bucket is None:
+            bucket = Bucket(kind=node.kind, wave=waves[node.id],
+                            static=static, cap=cap)
+            by_key[key] = bucket
+        bucket.node_ids.append(node.id)
+        node_bucket[node.id] = bucket
+    order = sorted(by_key.values(),
+                   key=lambda b: (b.wave, min(b.node_ids)))
+    return order, node_bucket
+
+
+# ----------------------------------------------------------------------
+# bucket bodies (built from the cache key alone — pure shape functions)
+# ----------------------------------------------------------------------
+def _scan_body(static, cap):
+    _, _idx_name, prefix_cols, residual_cols, takes, self_eq = static
+
+    def fn(index_data, pvals, rvals):
+        def step(carry, xs):
+            pv, rv = xs
+            prefix = tuple((c, pv[i]) for i, c in enumerate(prefix_cols))
+            residual = tuple((c, rv[i]) for i, c in enumerate(residual_cols))
+            return carry, E.scan_pattern(index_data, prefix, residual,
+                                         takes, self_eq, cap)
+
+        _, out = lax.scan(step, None, (pvals, rvals))
+        return out
+
+    return fn
+
+
+def _filter_body(static):
+    _, ci, _width = static
+
+    def fn(cdata, cn, covf, vals):
+        def step(carry, xs):
+            d, n, o, v = xs
+            return carry, E.filter_eq(E.PRel(d, n, o), ci, v)
+
+        _, out = lax.scan(step, None, (cdata, cn, covf, vals))
+        return out
+
+    return fn
+
+
+def _join_body(static, cap, use_pallas):
+    _, lcol, rcol, residual, keep_right, _lw, _rw = static
+
+    def fn(ldata, ln, lovf, rdata, rn, rovf):
+        def step(carry, xs):
+            ld, ln_, lo, rd, rn_, ro = xs
+            return carry, E.join(E.PRel(ld, ln_, lo), E.PRel(rd, rn_, ro),
+                                 lcol, rcol, residual, keep_right, cap,
+                                 use_pallas=use_pallas)
+
+        _, out = lax.scan(step, None, (ldata, ln, lovf, rdata, rn, rovf))
+        return out
+
+    return fn
+
+
+def _project_body(static):
+    _, idxs, dedupe, _cw = static
+
+    def fn(cdata, cn, covf):
+        def step(carry, xs):
+            d, n, o = xs
+            return carry, E.project(E.PRel(d, n, o), idxs, dedupe)
+
+        _, out = lax.scan(step, None, (cdata, cn, covf))
+        return out
+
+    return fn
+
+
+def _specs_of(args) -> tuple:
+    return tuple(jax.ShapeDtypeStruct(a.shape, a.dtype) for a in args)
+
+
+def _shape_key(specs) -> tuple:
+    return tuple((s.shape, str(s.dtype)) for s in specs)
+
+
+# ----------------------------------------------------------------------
+# the bucketed program
+# ----------------------------------------------------------------------
+class BucketedProgram:
+    """Executable lowering of a `WorkloadDAG` as shape buckets.
+
+    `execute(tt, views)` runs every bucket in wave order — one AOT
+    compiled `lax.scan` dispatch per bucket — and returns
+    ({root name: PRel}, own_overflow np (n_nodes,)), the same contract
+    as the unrolled program plus host-side overflow attribution.
+
+    `promote(node_ids)` moves the offending nodes' buckets to the next
+    capacity class; only those buckets' bodies (and consumers whose
+    operand shapes changed) recompile on the next execute — everything
+    else hits the persistent cache.
+    """
+
+    def __init__(self, dag: WorkloadDAG, stats, view_infos, *,
+                 safety: float = 4.0, use_pallas: bool = False,
+                 cap_planner=None, ests=None,
+                 carry_caps: dict | None = None):
+        self.dag = dag
+        self.stats = stats
+        self.use_pallas = use_pallas
+        if ests is None:
+            ests = cost_mod.estimate_dag(dag, stats, view_infos)
+        self.ests = ests
+        self.content_keys = dag.content_keys()
+
+        def _cap(node, rows: float) -> int:
+            if cap_planner is not None:
+                planned = int(cap_planner(node.plan, rows))
+            else:
+                planned = cost_mod.capacity_for(rows, safety=safety)
+            if carry_caps:
+                planned = max(planned,
+                              carry_caps.get(self.content_keys[node.id], 0))
+            return planned
+
+        caps = [0] * len(dag.nodes)
+        scan_specs: dict[int, tuple] = {}
+        join_specs: dict[int, tuple] = {}
+        for node in dag.nodes:
+            if node.kind == "scan":
+                idx_name, prefix, residual, takes, self_eq, _sorted = \
+                    E.atom_scan_spec(node.spec)
+                scan_specs[node.id] = (idx_name, prefix, residual, takes,
+                                       self_eq)
+                caps[node.id] = _cap(
+                    node, E.range_cardinality(node.spec, prefix, stats))
+            elif node.kind == "join":
+                lid, rid = node.child_ids
+                pairs = node.spec
+                doms = [max(ests[lid].info.dcol(l), ests[rid].info.dcol(r))
+                        for l, r in pairs]
+                lead_k = max(range(len(doms)), key=lambda i: doms[i])
+                lcol, rcol = pairs[lead_k]
+                residual = tuple(p for k, p in enumerate(pairs)
+                                 if k != lead_k)
+                drop = {r for _, r in pairs}
+                keep_right = tuple(i for i in range(dag.nodes[rid].width)
+                                   if i not in drop)
+                join_specs[node.id] = (lcol, rcol, residual, keep_right)
+                lead_rows = max(
+                    ests[lid].rows * ests[rid].rows / doms[lead_k], 1e-3)
+                caps[node.id] = _cap(node, lead_rows)
+        self.caps = caps
+        self.buckets, self.node_bucket = plan_buckets(dag, caps, scan_specs,
+                                                      join_specs)
+        # stack per-member scan constants once (they never change)
+        for b in self.buckets:
+            if b.kind == "scan":
+                pv, rv = [], []
+                for nid in b.node_ids:
+                    _, prefix, residual, _, _ = scan_specs[nid]
+                    pv.append([v for _, v in prefix])
+                    rv.append([v for _, v in residual])
+                # device-resident once: re-uploading per run would put a
+                # host transfer on every dispatch of the hot path
+                b.pvals = jnp.asarray(np.asarray(pv, np.int32).reshape(
+                    len(b.node_ids), -1))
+                b.rvals = jnp.asarray(np.asarray(rv, np.int32).reshape(
+                    len(b.node_ids), -1))
+        # telemetry (per program; the cache itself is process-global)
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.compile_seconds = 0.0
+        self.compile_log: list[dict] = []  # one entry per body compile
+
+    # ------------------------------------------------------------------
+    @property
+    def n_buckets(self) -> int:
+        return len(self.buckets)
+
+    def signatures(self) -> set[tuple]:
+        return {(b.static, b.cap) for b in self.buckets}
+
+    # ------------------------------------------------------------------
+    def promote(self, node_ids) -> list[tuple[int, int, int]]:
+        """Promote the buckets containing `node_ids` to the next
+        capacity class.  Returns [(nid, old_cap, new_cap)] for every
+        member of every promoted bucket (the whole bucket moves, so the
+        batch stays shape-uniform); empty when every offending bucket is
+        already at the capacity ceiling."""
+        grown: list[tuple[int, int, int]] = []
+        seen: set[int] = set()
+        for nid in node_ids:
+            bucket = self.node_bucket.get(nid)
+            if bucket is None or bucket.cap == 0 or id(bucket) in seen:
+                continue
+            seen.add(id(bucket))
+            new = cost_mod.promote_capacity(bucket.cap, CAP_CEIL)
+            if new <= bucket.cap:
+                continue
+            old = bucket.cap
+            bucket.cap = new
+            bucket.promotions += 1
+            for m in bucket.node_ids:
+                self.caps[m] = new
+                grown.append((m, old, new))
+        return grown
+
+    # ------------------------------------------------------------------
+    # operand assembly
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _pad_rows(data, cap: int):
+        """Pad the row axis (second-to-last) up to `cap` with -1 rows;
+        padded rows sit beyond the valid count, matching the scrubbed
+        tail every operator already ignores."""
+        have = data.shape[-2]
+        if have == cap:
+            return data
+        widths = [(0, 0)] * data.ndim
+        widths[-2] = (0, cap - have)
+        return jnp.pad(data, widths, constant_values=-1)
+
+    def _gather_slot(self, res, child_ids, cap: int):
+        """Stack one operand slot for a bucket: the children's PRels,
+        padded to `cap` rows each.  Consecutive children living in the
+        same producer bucket collapse into one gather, so the dispatch
+        count scales with producer-bucket runs, not members."""
+        parts_d, parts_n, parts_o = [], [], []
+        i = 0
+        while i < len(child_ids):
+            entry = res[child_ids[i]]
+            if entry[0] is None:  # single PRel (view node)
+                rel = entry[1]
+                parts_d.append(self._pad_rows(rel.data[None], cap))
+                parts_n.append(rel.n[None])
+                parts_o.append(rel.overflow[None])
+                i += 1
+                continue
+            producer = entry[0]
+            idxs = [entry[1]]
+            j = i + 1
+            while j < len(child_ids) and res[child_ids[j]][0] is producer:
+                idxs.append(res[child_ids[j]][1])
+                j += 1
+            take = jnp.asarray(np.asarray(idxs, np.int32))
+            parts_d.append(self._pad_rows(producer.data[take], cap))
+            parts_n.append(producer.n[take])
+            parts_o.append(producer.overflow[take])
+            i = j
+        if len(parts_d) == 1:
+            return parts_d[0], parts_n[0], parts_o[0]
+        return (jnp.concatenate(parts_d), jnp.concatenate(parts_n),
+                jnp.concatenate(parts_o))
+
+    # ------------------------------------------------------------------
+    def _run_bucket(self, bucket: Bucket, tt, res, eff_cap):
+        dag = self.dag
+        if bucket.kind == "scan":
+            _, idx_name = bucket.static[0], bucket.static[1]
+            args = (tt[idx_name], bucket.pvals, bucket.rvals)
+            build = lambda: _scan_body(bucket.static, bucket.cap)
+            out_cap = bucket.cap
+        elif bucket.kind == "filter":
+            kids = [dag.nodes[nid].child_ids[0] for nid in bucket.node_ids]
+            cap = max(eff_cap[c] for c in kids)
+            cd, cn, co = self._gather_slot(res, kids, cap)
+            vals = jnp.asarray(np.asarray(
+                [dag.nodes[nid].spec[1] for nid in bucket.node_ids],
+                np.int32))
+            args = (cd, cn, co, vals)
+            build = lambda: _filter_body(bucket.static)
+            out_cap = cap
+        elif bucket.kind == "join":
+            lkids = [dag.nodes[nid].child_ids[0] for nid in bucket.node_ids]
+            rkids = [dag.nodes[nid].child_ids[1] for nid in bucket.node_ids]
+            lcap = max(eff_cap[c] for c in lkids)
+            rcap = max(eff_cap[c] for c in rkids)
+            ld, ln, lo = self._gather_slot(res, lkids, lcap)
+            rd, rn, ro = self._gather_slot(res, rkids, rcap)
+            args = (ld, ln, lo, rd, rn, ro)
+            build = lambda: _join_body(bucket.static, bucket.cap,
+                                       self.use_pallas)
+            out_cap = bucket.cap
+        elif bucket.kind == "project":
+            kids = [dag.nodes[nid].child_ids[0] for nid in bucket.node_ids]
+            cap = max(eff_cap[c] for c in kids)
+            cd, cn, co = self._gather_slot(res, kids, cap)
+            args = (cd, cn, co)
+            build = lambda: _project_body(bucket.static)
+            out_cap = cap
+        else:
+            raise TypeError(bucket.kind)
+
+        specs = _specs_of(args)
+        key = (bucket.static, bucket.cap, self.use_pallas, _shape_key(specs))
+        compiled, cached, dt = _CACHE.get(key, build, specs)
+        if cached:
+            self.cache_hits += 1
+        else:
+            self.cache_misses += 1
+            self.compile_seconds += dt
+            self.compile_log.append({
+                "bucket": bucket.label, "kind": bucket.kind,
+                "wave": bucket.wave, "cap": bucket.cap,
+                "batch": len(bucket.node_ids), "seconds": dt,
+            })
+        out = compiled(*args)
+        for i, nid in enumerate(bucket.node_ids):
+            res[nid] = (out, i)
+            eff_cap[nid] = out_cap
+        return out
+
+    # ------------------------------------------------------------------
+    def execute(self, tt, views):
+        """Run every bucket; returns ({root: PRel}, own_overflow np)."""
+        dag = self.dag
+        n = len(dag.nodes)
+        res: list = [None] * n
+        eff_cap: list[int] = [0] * n
+        view_nids: list[int] = []
+        for node in dag.nodes:
+            if node.kind == "view":
+                rel = views[node.spec]
+                res[node.id] = (None, rel)
+                eff_cap[node.id] = rel.cap
+                view_nids.append(node.id)
+        outs = [self._run_bucket(b, tt, res, eff_cap) for b in self.buckets]
+
+        # host-side overflow attribution: one transfer for all flags
+        flat = jax.device_get(
+            [o.overflow for o in outs]
+            + [res[nid][1].overflow for nid in view_nids])
+        raw = np.zeros(n, dtype=bool)
+        for b, ovf in zip(self.buckets, flat[: len(outs)]):
+            raw[np.asarray(b.node_ids)] = np.asarray(ovf)
+        for nid, ovf in zip(view_nids, flat[len(outs):]):
+            raw[nid] = bool(ovf)
+        own = raw.copy()
+        for node in dag.nodes:
+            if node.kind == "view":
+                own[node.id] = False
+            elif node.child_ids and raw[list(node.child_ids)].any():
+                own[node.id] = False  # inherited, not this node's buffer
+
+        roots: dict[str, E.PRel] = {}
+        for name, nid in dag.roots.items():
+            entry = res[nid]
+            if entry[0] is None:
+                roots[name] = entry[1]
+            else:
+                out, i = entry
+                roots[name] = E.PRel(out.data[i], out.n[i], out.overflow[i])
+        return roots, own
+
+    # ------------------------------------------------------------------
+    def telemetry(self) -> dict:
+        return {
+            "buckets": self.n_buckets,
+            "bucket_signatures": len(self.signatures()),
+            "bucket_compiles": self.cache_misses,
+            "bucket_cache_hits": self.cache_hits,
+            "bucket_compile_seconds": self.compile_seconds,
+            "bucket_compile_log": list(self.compile_log),
+            "bucket_promotions": sum(b.promotions for b in self.buckets),
+        }

@@ -277,3 +277,13 @@ def capacity_for(rows_estimate: float, safety: float = 4.0, floor: int = 128,
     target = max(float(rows_estimate) * safety, float(floor))
     cap = 1 << max(int(math.ceil(math.log2(target))), 0)
     return int(min(max(cap, floor), ceil))
+
+
+def promote_capacity(cap: int, ceil: int = 1 << 22) -> int:
+    """Next capacity class above `cap` (classes are powers of two, so
+    promotion doubles).  Returns `cap` unchanged once the ceiling is
+    reached — callers treat a no-op promotion as 'cannot grow further'.
+    The bucketed executor promotes a whole shape bucket at a time, so
+    every member node of the bucket moves to the new class together and
+    the bucket's compiled body stays shared."""
+    return int(min(max(cap * 2, 2), ceil))

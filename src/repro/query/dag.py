@@ -137,6 +137,34 @@ class WorkloadDAG:
         return nid
 
     # ------------------------------------------------------------------
+    # stable identity across DAGs
+    # ------------------------------------------------------------------
+    def content_keys(self) -> list[tuple]:
+        """One fully-recursive canonical key per node, stable across DAG
+        instances: unlike `DagNode.key` (which embeds DAG-local child
+        *ids*), a content key embeds the children's content keys, so the
+        same logical subtree built in two different workload DAGs — e.g.
+        before and after a `swap_state` hot swap — maps to the same key.
+        Used to carry learned buffer capacities across program rebuilds.
+        """
+        out: list[tuple] = []
+        for node in self.nodes:
+            if node.kind == "scan":
+                out.append(("scan", _atom_key(node.spec)))
+            elif node.kind == "view":
+                out.append(("view", node.spec))
+            elif node.kind == "filter":
+                out.append(("filter", node.spec, out[node.child_ids[0]]))
+            elif node.kind == "join":
+                out.append(("join", tuple(sorted(node.spec)),
+                            out[node.child_ids[0]], out[node.child_ids[1]]))
+            elif node.kind == "project":
+                out.append(("project", node.spec, out[node.child_ids[0]]))
+            else:
+                raise TypeError(node.kind)
+        return out
+
+    # ------------------------------------------------------------------
     # sharing telemetry
     # ------------------------------------------------------------------
     def shared_node_ids(self) -> list[int]:

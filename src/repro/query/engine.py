@@ -77,7 +77,9 @@ def compact(data: jax.Array, mask: jax.Array, overflow: jax.Array) -> PRel:
 # operators
 # ----------------------------------------------------------------------
 def filter_eq(rel: PRel, col: int, value) -> PRel:
-    mask = _valid_mask(rel) & (rel.data[:, col] == jnp.int32(value))
+    # value may be a traced scalar (bucketed execution stacks the filter
+    # constants of a whole bucket into one operand array)
+    mask = _valid_mask(rel) & (rel.data[:, col] == jnp.asarray(value, jnp.int32))
     return compact(rel.data, mask, rel.overflow)
 
 
@@ -168,6 +170,9 @@ def scan_pattern(index_data: jax.Array, prefix: tuple[tuple[int, int], ...],
     single fused pass — the int32-safe substitute for a 64-bit fused key).
     residual: (col, value) equality filters not covered by the prefix.
     takes: variable positions to output; self_eq: same-var positions.
+    Prefix/residual values may be traced scalars (the bucketed executor
+    stacks the constants of a whole shape bucket into operand arrays);
+    the column positions and `cap` stay static.
     """
     n_tt = index_data.shape[0]
     if len(prefix) == 0:
@@ -175,15 +180,15 @@ def scan_pattern(index_data: jax.Array, prefix: tuple[tuple[int, int], ...],
         hi = jnp.int32(n_tt)
     elif len(prefix) == 1:
         col = index_data[:, prefix[0][0]]
-        key = jnp.int32(prefix[0][1])
+        key = jnp.asarray(prefix[0][1], jnp.int32)
         lo = jnp.searchsorted(col, key, side="left").astype(jnp.int32)
         hi = jnp.searchsorted(col, key, side="right").astype(jnp.int32)
     else:
         (c1, k1), (c2, k2) = prefix
         col1 = index_data[:, c1]
         col2 = index_data[:, c2]
-        k1 = jnp.int32(k1)
-        k2 = jnp.int32(k2)
+        k1 = jnp.asarray(k1, jnp.int32)
+        k2 = jnp.asarray(k2, jnp.int32)
         lt = (col1 < k1) | ((col1 == k1) & (col2 < k2))
         le = (col1 < k1) | ((col1 == k1) & (col2 <= k2))
         lo = jnp.sum(lt).astype(jnp.int32)
@@ -194,7 +199,7 @@ def scan_pattern(index_data: jax.Array, prefix: tuple[tuple[int, int], ...],
     # distributed TT shards are padded with SENTINEL_HI rows; exclude them
     valid = valid & (rows[:, 0] != SENTINEL_HI)
     for c, v in residual:
-        valid = valid & (rows[:, c] == jnp.int32(v))
+        valid = valid & (rows[:, c] == jnp.asarray(v, jnp.int32))
     for a, b in self_eq:
         valid = valid & (rows[:, a] == rows[:, b])
     out = rows[:, list(takes)] if takes else rows[:, :0]

@@ -1,19 +1,31 @@
-"""Fused workload execution: one jitted program answers every rewriting.
+"""Fused workload execution: shape-bucketed (default) or unrolled.
 
 `compile_workload` lowers a `WorkloadDAG` (query/dag.py) into a single
 function evaluated in one device call: nodes run in topological order,
 each shared node computed once and its `PRel` buffer read by every
 consumer.  Static buffer capacities are planned DAG-wide from the cost
-model (`cost.estimate_dag` + `cost.capacity_for`).
+model (`cost.estimate_dag` + `cost.capacity_for`).  This unrolled path
+traces one closure per node, so its compile time grows linearly with
+workload size — it remains as the A/B reference (`mode="unrolled"`).
 
-`WorkloadExecutor` wraps the compiled program in an adaptive driver:
-alongside the root results the program returns each node's *own*
-overflow flag (its latched overflow minus anything inherited from
-children), so when a capacity proves too small the driver knows exactly
-which buffer to grow — it doubles the offending node's capacity,
-recompiles, and retries under a bounded budget instead of raising to
-the caller.  Recompile counts and capacity history are kept as
-telemetry.
+The default lowering is *shape-bucketed* (`query/buckets.py`,
+`mode="bucketed"`): DAG nodes are grouped by (wave, operator kind,
+structural signature, capacity class) and each bucket executes as one
+`lax.scan` over stacked operands, compiled ahead-of-time through a
+process-global persistent cache.  Compile time scales with the number
+of distinct shapes, not the number of queries — near-flat from 22 to
+1000+ workload members (benchmarks/bench_compile_scale.py).
+
+`WorkloadExecutor` wraps either program in an adaptive driver: alongside
+the root results it observes each node's *own* overflow flag (latched
+overflow minus anything inherited from children), so when a capacity
+proves too small the driver knows exactly which buffer to grow.  In
+bucketed mode an overflow promotes only the offending node's *bucket*
+to the next capacity class — the next execute recompiles that bucket's
+body (and any consumer whose operand shape changed); every untouched
+body is a cache hit.  Capacities learned this way can be carried into a
+successor executor (`learned_caps()` / `carry_caps=`), so a hot-swapped
+program does not re-learn overflows the previous one already healed.
 
 The fused path compiles scans without consumer-specific sort
 preferences (a shared scan can't commit to one consumer's join order),
@@ -32,6 +44,7 @@ import numpy as np
 
 from repro.query import cost as cost_mod
 from repro.query import engine as E
+from repro.query.buckets import BucketedProgram, compile_cache
 from repro.query.dag import WorkloadDAG
 
 CAP_CEIL = 1 << 22
@@ -148,16 +161,27 @@ def compile_workload(dag: WorkloadDAG, stats, view_infos,
 class WorkloadExecutor:
     """Adaptive driver around the fused workload program.
 
-    `run` executes the whole workload in a single device call; on
-    capacity overflow it doubles the offending nodes' capacities,
-    recompiles, and retries — up to `max_retries` recompiles, after
-    which (or once a buffer hits the capacity ceiling) it raises.
+    `run` executes the whole workload; on capacity overflow it grows the
+    offending buffers (bucketed mode: promotes the offending *buckets*
+    to the next capacity class; unrolled mode: doubles the node's
+    buffer), recompiles what changed, and retries — up to `max_retries`
+    recompiles, after which (or once a buffer hits the capacity ceiling)
+    it raises.
+
+    `carry_caps` seeds planning with capacities a previous executor
+    learned (`learned_caps()`), keyed by DAG content key, so a rebuilt
+    program — e.g. after a `swap_state` hot swap — starts from the
+    healed capacities instead of re-learning every overflow.
     """
 
     def __init__(self, dag: WorkloadDAG, stats, view_infos, *,
                  safety: float = 4.0, use_pallas: bool = False,
                  max_retries: int = 12,
-                 cap_planner: Callable[[object, float], int] | None = None):
+                 cap_planner: Callable[[object, float], int] | None = None,
+                 mode: str = "bucketed",
+                 carry_caps: dict | None = None):
+        if mode not in ("bucketed", "unrolled"):
+            raise ValueError(f"unknown workload mode {mode!r}")
         self.dag = dag
         self.stats = stats
         self.view_infos = view_infos
@@ -165,6 +189,8 @@ class WorkloadExecutor:
         self.use_pallas = use_pallas
         self.max_retries = max_retries
         self.cap_planner = cap_planner
+        self.mode = mode
+        self.carry_caps = dict(carry_caps or {})
         self.caps: list[int] | None = None
         # telemetry
         self.compiles = 0
@@ -172,22 +198,74 @@ class WorkloadExecutor:
         self.recompiles = 0
         self.cap_history: dict[int, list[int]] = {}
         self._jit = None
+        self._prog: BucketedProgram | None = None
         self._ests = None
 
-    def _compile(self) -> None:
+    # ------------------------------------------------------------------
+    # program construction
+    # ------------------------------------------------------------------
+    def _ensure_ests(self):
         if self._ests is None:
             self._ests = cost_mod.estimate_dag(self.dag, self.stats,
                                                self.view_infos)
+        return self._ests
+
+    def _compile(self) -> None:
+        """Unrolled mode: (re)trace the whole program."""
         fn = compile_workload(self.dag, self.stats, self.view_infos,
                               safety=self.safety, use_pallas=self.use_pallas,
                               caps=self.caps, cap_planner=self.cap_planner,
-                              ests=self._ests)
+                              ests=self._ensure_ests())
         self.caps = fn.caps
         self._jit = jax.jit(fn)
         self.compiles += 1
 
+    def _program(self) -> BucketedProgram:
+        if self._prog is None:
+            self._prog = BucketedProgram(
+                self.dag, self.stats, self.view_infos, safety=self.safety,
+                use_pallas=self.use_pallas, cap_planner=self.cap_planner,
+                ests=self._ensure_ests(), carry_caps=self.carry_caps)
+            self.caps = self._prog.caps
+            self.compiles += 1
+        return self._prog
+
+    # ------------------------------------------------------------------
     def run(self, tt, views) -> dict[str, E.PRel]:
         """Answer every workload member; returns {name: PRel}."""
+        if self.mode == "bucketed":
+            return self._run_bucketed(tt, views)
+        return self._run_unrolled(tt, views)
+
+    def _run_bucketed(self, tt, views) -> dict[str, E.PRel]:
+        prog = self._program()
+        attempt = 0
+        while True:
+            roots, own = prog.execute(tt, views)
+            self.runs += 1
+            if not own.any():
+                return roots
+            offending = np.nonzero(own)[0].tolist()
+            if attempt >= self.max_retries:
+                raise RuntimeError(
+                    f"capacity overflow persists after {attempt} adaptive "
+                    f"recompiles (nodes {offending}); estimates are "
+                    f"pathologically low — raise max_retries or safety"
+                )
+            grown = prog.promote(offending)
+            if not grown:
+                raise RuntimeError(
+                    f"capacity ceiling ({CAP_CEIL}) reached on nodes "
+                    f"{offending}; result exceeds the engine's maximum "
+                    f"buffer size"
+                )
+            for nid, old, new in grown:
+                self.cap_history.setdefault(nid, [old]).append(new)
+            self.compiles += 1
+            self.recompiles += 1
+            attempt += 1
+
+    def _run_unrolled(self, tt, views) -> dict[str, E.PRel]:
         if self._jit is None:
             self._compile()
         attempt = 0
@@ -222,9 +300,42 @@ class WorkloadExecutor:
             self.recompiles += 1
             attempt += 1
 
+    # ------------------------------------------------------------------
+    # capacity carry across program rebuilds
+    # ------------------------------------------------------------------
+    def learned_caps(self) -> dict:
+        """Capacities grown by the adaptive driver, keyed by DAG content
+        key (stable across DAG instances), merged over whatever this
+        executor itself was seeded with — pass to a successor's
+        `carry_caps=` so a hot-swapped program keeps the healed sizes."""
+        out = dict(self.carry_caps)
+        if self.cap_history and self.caps is not None:
+            keys = self.dag.content_keys()
+            for nid in self.cap_history:
+                out[keys[nid]] = max(out.get(keys[nid], 0), self.caps[nid])
+        return out
+
+    # ------------------------------------------------------------------
+    def warmup(self, tt, views) -> dict[str, E.PRel]:
+        """Pre-warm the serving path: compile every bucket body (mostly
+        persistent-cache hits after a hot swap) and heal any planning
+        overflows by running the workload once.  Returns the roots so
+        callers can seed their result caches."""
+        return self.run(tt, views)
+
+    # ------------------------------------------------------------------
     def telemetry(self) -> dict:
         t = dict(self.dag.stats())
         t.update(compiles=self.compiles, runs=self.runs,
                  recompiles=self.recompiles,
-                 grown_nodes=sorted(self.cap_history))
+                 grown_nodes=sorted(self.cap_history),
+                 mode=self.mode)
+        # bucket/compile-cache telemetry (zeros on the unrolled path so
+        # consumers can rely on the keys being present)
+        t.update(buckets=0, bucket_signatures=0, bucket_compiles=0,
+                 bucket_cache_hits=0, bucket_compile_seconds=0.0,
+                 bucket_compile_log=[], bucket_promotions=0)
+        if self._prog is not None:
+            t.update(self._prog.telemetry())
+        t["compile_cache"] = compile_cache().stats()
         return t

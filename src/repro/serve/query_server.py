@@ -34,6 +34,13 @@ class ServeStats:
     shared_nodes: int = 0
     node_reuse_count: int = 0
     retunes: int = 0
+    # shape-bucketed compile telemetry (query/buckets.py)
+    buckets: int = 0
+    bucket_compiles: int = 0
+    bucket_cache_hits: int = 0
+    bucket_cache_misses: int = 0
+    bucket_compile_seconds: float = 0.0
+    compile_cache_entries: int = 0
 
     def as_dict(self) -> dict:
         return dict(self.__dict__)
@@ -132,3 +139,9 @@ class QueryServer:
         self.stats.recompiles = t["recompiles"]
         self.stats.shared_nodes = t["shared_nodes"]
         self.stats.node_reuse_count = t["node_reuse_count"]
+        self.stats.buckets = t["buckets"]
+        self.stats.bucket_compiles = t["bucket_compiles"]
+        self.stats.bucket_cache_hits = t["bucket_cache_hits"]
+        self.stats.bucket_cache_misses = t["bucket_compiles"]
+        self.stats.bucket_compile_seconds = t["bucket_compile_seconds"]
+        self.stats.compile_cache_entries = t["compile_cache"]["entries"]

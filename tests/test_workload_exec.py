@@ -3,13 +3,15 @@ executor, adaptive capacity recovery, device materialization, serving."""
 import numpy as np
 import pytest
 
+from repro.core.queries import Atom, CQ, Const, Var
 from repro.core.reformulation import reformulate_workload
 from repro.core.search import SearchConfig
 from repro.core.wizard import WizardConfig, tune
 from repro.query import engine as E
 from repro.query import ref_engine as R
+from repro.query.buckets import clear_compile_cache
 from repro.query.dag import build_dag
-from repro.query.plan import plan_for_cq
+from repro.query.plan import TTScan, plan_for_cq
 from repro.query.workload import WorkloadExecutor
 from repro.rdf.generator import generate, lubm_workload
 from repro.serve.query_server import QueryServer
@@ -123,6 +125,152 @@ def test_executor_answer_recovers_from_overflow(uni, report):
         assert ex.answer_group(q.name) == ex.answer_group_direct(q.name)
     t = ex.telemetry()
     assert t["runs"] >= 1 and t["compiles"] == t["recompiles"] + 1
+
+
+# ----------------------------------------------------------------------
+# shape-bucketed execution
+# ----------------------------------------------------------------------
+def _course_scan_workload(uni):
+    """Three same-shape course scans (one bucket) + one advisor scan
+    (structurally different -> its own bucket).  Every plan root is the
+    scan itself, so bucket attribution is exact."""
+    d = uni.dictionary
+    takes = Const(d.lookup("ub:takesCourse"))
+    adv = Const(d.lookup("ub:advisor"))
+    x, y = Var("x"), Var("y")
+    qs = [CQ((x,), (Atom(x, takes, Const(d.lookup(c))),), name=f"takes{i}")
+          for i, c in enumerate(["u0.d0.c0", "u0.d0.c1", "u0.d1.c0"])]
+    qs.append(CQ((x, y), (Atom(x, adv, y),), name="adv"))
+    return qs, takes
+
+
+def test_overflow_promotes_only_offending_bucket(uni):
+    """Force an overflow inside ONE bucket: the adaptive driver promotes
+    that bucket to the next capacity class and recompiles ONLY its body
+    — the other bucket never recompiles — and answers stay exact."""
+    clear_compile_cache()
+    qs, takes = _course_scan_workload(uni)
+    dag = build_dag({q.name: plan_for_cq(q) for q in qs})
+
+    def planner(plan, rows):
+        if isinstance(plan, TTScan) and plan.atom.p == takes:
+            return 2  # guaranteed too small: every course has >2 takers
+        return 512
+
+    wl = WorkloadExecutor(dag, uni.store.stats, {}, cap_planner=planner,
+                          max_retries=16)
+    roots = wl.run(E.tt_device_indexes(uni.store), {})
+    for q in qs:
+        got = {tuple(r) for r in E.to_numpy(roots[q.name]).tolist()}
+        assert got == R.evaluate_cq(q, uni.store).as_set(), q.name
+    assert wl.recompiles >= 1
+    t = wl.telemetry()
+    assert t["mode"] == "bucketed"
+    promoted = [b for b in wl._prog.buckets if b.promotions > 0]
+    assert len(promoted) == 1  # exactly one bucket grew...
+    assert promoted[0].kind == "scan" and len(promoted[0].node_ids) == 3
+    # ...and every compile past the initial set recompiled THAT bucket:
+    # same 3-member batch, at a promoted capacity class
+    log = t["bucket_compile_log"]
+    assert len(log) == t["buckets"] + promoted[0].promotions
+    for entry in log[t["buckets"]:]:
+        assert entry["kind"] == "scan"
+        assert entry["batch"] == 3 and entry["cap"] > 2
+    # untouched bucket compiled exactly once across all retries
+    assert sum(1 for e in log if e["batch"] == 1) == 1
+    assert t["bucket_promotions"] == promoted[0].promotions
+
+
+def test_bucketed_matches_unrolled(uni):
+    """A/B: the bucketed lowering answers member-for-member identically
+    to the unrolled reference program."""
+    qs, _ = _course_scan_workload(uni)
+    dag = build_dag({q.name: plan_for_cq(q) for q in qs})
+    tt = E.tt_device_indexes(uni.store)
+    rb = WorkloadExecutor(dag, uni.store.stats, {},
+                          mode="bucketed").run(tt, {})
+    ru = WorkloadExecutor(dag, uni.store.stats, {},
+                          mode="unrolled").run(tt, {})
+    assert set(rb) == set(ru)
+    for name in rb:
+        got_b = {tuple(r) for r in E.to_numpy(rb[name]).tolist()}
+        got_u = {tuple(r) for r in E.to_numpy(ru[name]).tolist()}
+        assert got_b == got_u, name
+
+
+def test_learned_caps_carry_to_successor(uni, members, baseline_dag):
+    """Capacities grown adaptively carry into a successor executor over
+    a fresh DAG instance: the successor never re-learns them."""
+    ms, _ = members
+    tt = E.tt_device_indexes(uni.store)
+    wl1 = WorkloadExecutor(baseline_dag, uni.store.stats, {},
+                           cap_planner=lambda node, rows: 32, max_retries=24)
+    wl1.run(tt, {})
+    assert wl1.recompiles >= 1
+    carry = wl1.learned_caps()
+    assert carry  # keyed by content key, not node id
+    assert all(isinstance(k, tuple) for k in carry)
+
+    dag2 = build_dag({m.name: plan_for_cq(m) for m in ms})  # fresh ids
+    wl2 = WorkloadExecutor(dag2, uni.store.stats, {},
+                           cap_planner=lambda node, rows: 32, max_retries=24,
+                           carry_caps=carry)
+    roots = wl2.run(tt, {})
+    assert wl2.recompiles == 0  # healed capacities carried over
+    for m in ms:
+        got = {tuple(r) for r in E.to_numpy(roots[m.name]).tolist()}
+        assert got == R.evaluate_cq(m, uni.store).as_set(), m.name
+
+
+def test_swap_state_carries_caps_and_prewarms(uni):
+    """The hot-swap path threads learned capacities into the incoming
+    program and pre-warms it: after swap_state the results cache is
+    already seeded and nothing re-learns old overflows."""
+    from repro.core.executor import QueryExecutor
+    from repro.core.state import State
+
+    qs, takes = _course_scan_workload(uni)
+    # a state executing straight off the TT (scan nodes that CAN overflow
+    # — the tiny LUBM instance tunes to view-only rewritings otherwise)
+    state = State(views={}, queries=tuple(qs),
+                  rewritings={q.name: plan_for_cq(q) for q in qs})
+    groups = {q.name: [q.name] for q in qs}
+
+    def planner(plan, rows):
+        if isinstance(plan, TTScan) and plan.atom.p == takes:
+            return 2
+        return 512
+
+    ex = QueryExecutor(uni.store, state, groups, cap_planner=planner,
+                       max_retries=16)
+    ex.answer_workload()
+    assert ex.workload.recompiles >= 1
+    grown = ex.workload.learned_caps()
+    assert grown  # tiny caps forced adaptive growth
+    ex.swap_state(state, groups)  # warm=True default
+    assert ex.workload.carry_caps == grown
+    assert ex.workload.recompiles == 0
+    assert ex.workload.runs >= 1  # pre-warmed on the swap
+    assert ex._results is not None  # serving cache seeded
+    for q in qs:
+        assert ex.answer_group(q.name) == ex.answer_group_direct(q.name)
+
+
+def test_bucket_telemetry_reaches_server_stats(uni, report):
+    srv = QueryServer(report.executor)
+    srv.answer_batch([q.name for q in lubm_workload(uni.dictionary)])
+    t = report.executor.telemetry()
+    assert t["mode"] == "bucketed"
+    assert t["buckets"] >= 1
+    assert t["bucket_compiles"] + t["bucket_cache_hits"] >= t["buckets"]
+    assert t["compile_cache"]["entries"] >= 1
+    s = srv.stats
+    assert s.buckets == t["buckets"]
+    assert s.bucket_compiles == t["bucket_compiles"]
+    assert s.bucket_cache_hits == t["bucket_cache_hits"]
+    assert s.bucket_cache_misses == t["bucket_compiles"]
+    assert s.bucket_compile_seconds == t["bucket_compile_seconds"]
+    assert s.compile_cache_entries == t["compile_cache"]["entries"]
 
 
 # ----------------------------------------------------------------------

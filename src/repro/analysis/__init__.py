@@ -1,0 +1,33 @@
+"""Static verification of the tuning pipeline (no execution).
+
+Four analyzer families over a tuned workload and the library source:
+
+  * `ir_verifier`  — structural soundness of the shared-subplan DAG,
+    including canonical-key collision/instability detection
+  * `capacity`     — predicted buffer overflows and recompile hazards
+    from the cost model, before anything runs
+  * `jaxpr_lint`   — abstract traces of every bucket body checked
+    against the engine contract (int32/bool, static shapes, no host
+    callbacks) plus compile-cache key soundness
+  * `repo_rules`   — AST lint of the library source (bare asserts,
+    mutable defaults, unhashable jit static args)
+
+Entry points: `analyze_workload` / `analyze_state` / `verify_session` /
+`analyze_repo` (driver.py), `WorkloadExecutor.analyze()`,
+`TuningSession.verify()`, and the `python -m repro.analysis` CLI.
+"""
+from repro.analysis.capacity import analyze_capacity
+from repro.analysis.driver import (analyze_repo, analyze_state,
+                                   analyze_workload, verify_session)
+from repro.analysis.findings import SEVERITIES, AnalysisReport, Finding
+from repro.analysis.ir_verifier import verify_dag
+from repro.analysis.jaxpr_lint import check_cache_keys, lint_program, lint_traced
+from repro.analysis.repo_rules import check_source, run_repo_rules
+
+__all__ = [
+    "SEVERITIES", "AnalysisReport", "Finding",
+    "analyze_capacity", "analyze_repo", "analyze_state",
+    "analyze_workload", "check_cache_keys", "check_source",
+    "lint_program", "lint_traced", "run_repo_rules", "verify_dag",
+    "verify_session",
+]

@@ -1,0 +1,197 @@
+"""Repo rules: AST lint over the library source itself.
+
+The runtime analyzers check what a program IS; these rules check what
+the source says, catching patterns that only bite later:
+
+  rules/bare-assert        `assert` in library code — stripped under
+                           `python -O`, so the invariant silently stops
+                           being checked (use repro.errors instead)
+  rules/mutable-default    mutable default argument (shared across
+                           calls; classic aliasing bug)
+  rules/unhashable-static  a jit static argument with a mutable default
+                           — tracing would crash (or worse, cache on
+                           object identity) the first time the default
+                           is used
+
+Scope: the pipeline packages (`core`, `query`, `api`, `views`, `rdf`,
+`serve`, `kernels`, `checkpoint`, `analysis`, the top-level modules).
+The ML-substrate packages inherited from the seed (`models`, `launch`,
+`train`, `configs`, `distributed`, `data`) are excluded — they run
+under tracing where asserts act as shape guards — as are tests.  A
+line-level opt-out exists: append ``# lint: allow-assert``.
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+from repro.analysis.findings import Finding
+
+EXCLUDED_DIRS = frozenset(
+    {"models", "launch", "train", "configs", "distributed", "data",
+     "tests", "__pycache__"})
+ALLOW_MARKER = "lint: allow-assert"
+
+_MUTABLE_CALLS = ("list", "dict", "set", "bytearray")
+
+
+def _f(rule: str, message: str, location: str,
+       severity: str = "error") -> Finding:
+    return Finding("rules", rule, severity, message, location)
+
+
+def _is_mutable_literal(node: ast.expr) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                         ast.DictComp, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+        return node.func.id in _MUTABLE_CALLS
+    return False
+
+
+def _defaults_by_param(fn: ast.FunctionDef | ast.AsyncFunctionDef
+                       ) -> dict[str, ast.expr]:
+    """param name -> default expression (positional + kw-only)."""
+    out: dict[str, ast.expr] = {}
+    pos = fn.args.posonlyargs + fn.args.args
+    for arg, default in zip(pos[len(pos) - len(fn.args.defaults):],
+                            fn.args.defaults):
+        out[arg.arg] = default
+    for arg, default in zip(fn.args.kwonlyargs, fn.args.kw_defaults):
+        if default is not None:
+            out[arg.arg] = default
+    return out
+
+
+def _param_names(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> list[str]:
+    return [a.arg for a in fn.args.posonlyargs + fn.args.args]
+
+
+def _is_jit_ref(node: ast.expr) -> bool:
+    """`jax.jit`, `jit`, `pjit`, `jax.pmap` references."""
+    if isinstance(node, ast.Name):
+        return node.id in ("jit", "pjit", "pmap")
+    if isinstance(node, ast.Attribute):
+        return node.attr in ("jit", "pjit", "pmap")
+    return False
+
+
+def _static_params(call: ast.Call, fn: ast.FunctionDef | None
+                   ) -> list[str] | None:
+    """Parameter names a jit call marks static, or None if not a jit
+    call with static arguments."""
+    if not (_is_jit_ref(call.func)
+            or (isinstance(call.func, ast.Attribute)
+                and call.func.attr == "partial"
+                and call.args and _is_jit_ref(call.args[0]))
+            or (isinstance(call.func, ast.Name)
+                and call.func.id == "partial"
+                and call.args and _is_jit_ref(call.args[0]))):
+        return None
+    names: list[str] = []
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for elt in ast.walk(kw.value):
+                if isinstance(elt, ast.Constant) and isinstance(elt.value,
+                                                                str):
+                    names.append(elt.value)
+        elif kw.arg == "static_argnums" and fn is not None:
+            params = _param_names(fn)
+            for elt in ast.walk(kw.value):
+                if isinstance(elt, ast.Constant) and isinstance(elt.value,
+                                                                int):
+                    if 0 <= elt.value < len(params):
+                        names.append(params[elt.value])
+    return names
+
+
+def check_source(source: str, path: str) -> list[Finding]:
+    """Run every rule over one module's source."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [_f("rules/bare-assert", f"unparseable module: {e}",
+                   f"{path}:{e.lineno or 0}")]
+    lines = source.splitlines()
+    out: list[Finding] = []
+
+    functions: dict[str, ast.FunctionDef | ast.AsyncFunctionDef] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            functions.setdefault(node.name, node)
+
+    for node in ast.walk(tree):
+        # rule: bare assert ------------------------------------------------
+        if isinstance(node, ast.Assert):
+            line = lines[node.lineno - 1] if node.lineno <= len(lines) else ""
+            if ALLOW_MARKER not in line:
+                out.append(_f(
+                    "rules/bare-assert",
+                    "bare `assert` in library code — stripped under "
+                    "`python -O`; raise repro.errors.InvariantViolation "
+                    "(or a typed exception) instead",
+                    f"{path}:{node.lineno}"))
+        # rule: mutable default -------------------------------------------
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for pname, default in _defaults_by_param(node).items():
+                if _is_mutable_literal(default):
+                    out.append(_f(
+                        "rules/mutable-default",
+                        f"parameter {pname!r} of {node.name}() has a "
+                        "mutable default — shared across every call; "
+                        "default to None and construct inside",
+                        f"{path}:{node.lineno}"))
+            # decorator form: @partial(jax.jit, static_argnames=...)
+            for dec in node.decorator_list:
+                if isinstance(dec, ast.Call):
+                    statics = _static_params(dec, node)
+                    if statics:
+                        out.extend(_check_static_defaults(
+                            node, statics, path))
+        # rule: jit(f, static_...) call form -------------------------------
+        if isinstance(node, ast.Call):
+            target = None
+            if node.args and isinstance(node.args[0], ast.Name):
+                target = functions.get(node.args[0].id)
+            statics = _static_params(node, target)
+            if statics and target is not None:
+                out.extend(_check_static_defaults(target, statics, path))
+    return out
+
+
+def _check_static_defaults(fn, statics: list[str],
+                           path: str) -> list[Finding]:
+    out: list[Finding] = []
+    defaults = _defaults_by_param(fn)
+    for pname in statics:
+        default = defaults.get(pname)
+        if default is not None and _is_mutable_literal(default):
+            out.append(_f(
+                "rules/unhashable-static",
+                f"static argument {pname!r} of jitted {fn.name}() defaults "
+                "to an unhashable value — the jit cache keys on hash() and "
+                "will crash the first time the default is used",
+                f"{path}:{fn.lineno}"))
+    return out
+
+
+def iter_library_files(root: str):
+    """Python files of the pipeline packages under `root` (the `repro`
+    package directory), honoring EXCLUDED_DIRS."""
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames if d not in EXCLUDED_DIRS)
+        for name in sorted(filenames):
+            if name.endswith(".py"):
+                yield os.path.join(dirpath, name)
+
+
+def run_repo_rules(root: str) -> tuple[list[Finding], int]:
+    """Run every rule over the library tree; returns (findings, n_files)."""
+    findings: list[Finding] = []
+    n = 0
+    for path in iter_library_files(root):
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+        findings.extend(check_source(source, os.path.relpath(path, root)))
+        n += 1
+    return findings, n

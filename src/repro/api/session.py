@@ -260,6 +260,27 @@ class TuningSession:
         return QueryServer(self._ensure_applied(), session=self)
 
     # ------------------------------------------------------------------
+    # static verification
+    # ------------------------------------------------------------------
+    def verify(self, strict: bool = False):
+        """Statically verify the session's current configuration — plan-IR
+        soundness, capacity/recompile hazards, bucket-body lint — without
+        executing anything (`repro.analysis`).  With an applied executor
+        the live program (real extent statistics, learned capacities) is
+        verified; after a bare `retune()` the tuned best state is
+        analyzed from cost estimates.  Returns the `AnalysisReport`;
+        `strict=True` raises `InvariantViolation` unless it is clean.
+        """
+        from repro import analysis
+        from repro.errors import InvariantViolation
+
+        report = analysis.verify_session(self)
+        if strict and not report.clean():
+            raise InvariantViolation(
+                "session verification failed:\n" + report.format())
+        return report
+
+    # ------------------------------------------------------------------
     # persistence
     # ------------------------------------------------------------------
     def save(self, ckpt_dir: str, step: int | None = None) -> str:

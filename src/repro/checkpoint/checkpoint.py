@@ -80,12 +80,16 @@ def restore(ckpt_dir: str, step: int, target_tree, shardings=None):
         manifest = json.load(f)
     data = np.load(os.path.join(d, "arrays.npz"))
     paths, _, treedef = _flatten_with_paths(target_tree)
-    assert paths == manifest["paths"], (
-        "checkpoint tree mismatch: "
-        f"{set(paths) ^ set(manifest['paths'])}")
+    if paths != manifest["paths"]:
+        raise ValueError(
+            "checkpoint tree mismatch: "
+            f"{set(paths) ^ set(manifest['paths'])}")
     leaves = [data[f"a{i}"] for i in range(len(paths))]
     if shardings is not None:
         sh_leaves = jax.tree.leaves(shardings)
-        assert len(sh_leaves) == len(leaves)
+        if len(sh_leaves) != len(leaves):
+            raise ValueError(
+                f"shardings tree has {len(sh_leaves)} leaves, "
+                f"checkpoint has {len(leaves)}")
         leaves = [jax.device_put(x, s) for x, s in zip(leaves, sh_leaves)]
     return jax.tree.unflatten(treedef, leaves)

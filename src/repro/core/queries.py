@@ -16,6 +16,8 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Iterator, Mapping, Sequence
 
+from repro.errors import InvariantViolation
+
 
 @dataclass(frozen=True, order=True)
 class Var:
@@ -218,7 +220,8 @@ class CQ:
             cand = encode(order)
             if best is None or cand < best:
                 best = cand
-        assert best is not None
+        if best is None:
+            raise InvariantViolation("canonical search visited no ordering")
         return best
 
     def canonical_var_order(self) -> tuple[Var, ...]:

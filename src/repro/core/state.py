@@ -99,8 +99,10 @@ def initial_state(queries: list[CQ]) -> State:
     rewritings: dict[str, Plan] = {}
     nid = 0
     for q in queries:
-        assert q.name, "workload queries must be named"
-        assert q.name not in rewritings, f"duplicate query name {q.name}"
+        if not q.name:
+            raise ValueError("workload queries must be named")
+        if q.name in rewritings:
+            raise ValueError(f"duplicate query name {q.name!r}")
         nid = _materialize_exactly(views, rewritings, q, nid)
     return State(views=views, rewritings=rewritings, queries=tuple(queries),
                  next_view_id=nid)

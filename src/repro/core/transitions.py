@@ -24,6 +24,7 @@ from typing import Iterator
 
 from repro.core.queries import CQ, Atom, Const, Var, full_projection, isomorphism
 from repro.core.state import State, View
+from repro.errors import InvariantViolation, require
 from repro.query.plan import (EquiJoin, Filter, Plan, Project, ViewRef,
                               referenced_views, remap_view, replace_view)
 
@@ -54,7 +55,8 @@ def apply_selection_cut(state: State, vid: int, atom_idx: int, pos: int) -> Stat
     view = state.views[vid]
     atom = view.cq.atoms[atom_idx]
     const = atom.terms()[pos]
-    assert isinstance(const, Const), "selection cut needs a constant"
+    if not isinstance(const, Const):
+        raise InvariantViolation("selection cut needs a constant")
     fresh, state = state.fresh_var()
     new_terms = list(atom.terms())
     new_terms[pos] = fresh
@@ -106,14 +108,15 @@ def apply_join_cut(state: State, vid: int, x: Var, comp: tuple[int, ...]) -> Sta
     view = state.views[vid]
     part1 = [view.cq.atoms[i] for i in comp]
     part2 = [a for i, a in enumerate(view.cq.atoms) if i not in comp]
-    assert part1 and part2, "join cut must split the view"
+    require(bool(part1 and part2), "join cut must split the view")
     cq1 = full_projection(part1, name=f"{view.cq.name}+jc1")
     cq2 = full_projection(part2, name=f"{view.cq.name}+jc2")
     # both sides must still contain the cut variable
-    assert x in cq1.all_vars() and x in cq2.all_vars()
+    require(x in cq1.all_vars() and x in cq2.all_vars(),
+            f"cut variable {x!r} must appear on both sides of the split")
     # the two parts share only x (guaranteed by component construction)
     shared = set(cq1.all_vars()) & set(cq2.all_vars())
-    assert shared == {x}, f"parts share {shared}, expected only {x}"
+    require(shared == {x}, f"parts share {shared}, expected only {x}")
 
     vid1 = state.next_view_id
     vid2 = vid1 + 1
@@ -151,7 +154,8 @@ def fusion_candidates(state: State) -> Iterator[tuple[int, int]]:
 def apply_fusion(state: State, keep_vid: int, drop_vid: int) -> State:
     keep, drop = state.views[keep_vid], state.views[drop_vid]
     iso = isomorphism(drop.cq, keep.cq)
-    assert iso is not None, "fusion requires isomorphic views"
+    if iso is None:
+        raise InvariantViolation("fusion requires isomorphic views")
     # perm[j]: position in drop.head of the variable mapped to keep.head[j]
     drop_pos = {h: i for i, h in enumerate(drop.cq.head)}
     keep_pos = {h: j for j, h in enumerate(keep.cq.head)}

@@ -80,7 +80,10 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
     B, S, H, hd = q.shape
     Hkv = k.shape[2]
     G = H // Hkv
-    assert S % cq == 0 and S % ck == 0, (S, cq, ck)
+    if S % cq != 0 or S % ck != 0:
+        raise ValueError(
+            f"sequence length {S} must be a multiple of the query/key "
+            f"block sizes ({cq}, {ck})")
     nq, nk = S // cq, S // ck
     scale = 1.0 / (hd ** 0.5)
 

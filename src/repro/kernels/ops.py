@@ -2,10 +2,18 @@
 
 `interpret` defaults to True off-TPU (this container validates kernels in
 interpret mode); on a real TPU backend the compiled kernels run.
+
+Every wrapper validates operand dtypes/shapes (and static arguments) up
+front.  Interpret mode is far laxer than compiled Mosaic — a float64
+probe column or a 3-D rows buffer would "work" on CPU and then fail (or
+silently truncate) the first time the same call hits a real TPU — so
+the contract is enforced identically on both paths, with a typed error
+naming the operand instead of a shape blow-up from inside the kernel.
 """
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.filter_compact import filter_mask_pallas
 from repro.kernels.flash_attn import flash_attention_pallas
@@ -16,19 +24,67 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _check(x, name: str, ndim: int, dtype=None) -> None:
+    """Operand contract: rank and (optionally) dtype.  Works on concrete
+    arrays and tracers alike — both carry shape/dtype."""
+    shape = getattr(x, "shape", None)
+    got_dtype = getattr(x, "dtype", None)
+    if shape is None or got_dtype is None:
+        raise TypeError(f"{name} must be an array, got {type(x).__name__}")
+    if len(shape) != ndim:
+        raise ValueError(
+            f"{name} must be {ndim}-D, got shape {tuple(shape)}")
+    if dtype is not None and jnp.dtype(got_dtype) != jnp.dtype(dtype):
+        raise TypeError(
+            f"{name} must be {jnp.dtype(dtype).name}, got "
+            f"{jnp.dtype(got_dtype).name}")
+
+
 def join_count(probe: jax.Array, build_sorted: jax.Array
                ) -> tuple[jax.Array, jax.Array]:
     """(lo, count) per probe key — Pallas probe phase of the sorted join."""
+    _check(probe, "probe", 1, jnp.int32)
+    _check(build_sorted, "build_sorted", 1, jnp.int32)
     return join_count_pallas(probe, build_sorted, interpret=_interpret())
 
 
 def filter_mask(rows: jax.Array, conds: tuple[tuple[int, int], ...]
                 ) -> tuple[jax.Array, jax.Array]:
     """(mask, block_counts) for a static conjunction of equalities."""
+    _check(rows, "rows", 2, jnp.int32)
+    width = rows.shape[1]
+    for k, cond in enumerate(conds):
+        if len(cond) != 2 or not all(isinstance(c, int) for c in cond):
+            raise TypeError(
+                f"conds[{k}] must be a static (col, value) int pair, "
+                f"got {cond!r}")
+        col, _value = cond
+        if not (0 <= col < width):
+            raise ValueError(
+                f"conds[{k}] column {col} out of range for rows of "
+                f"width {width}")
     return filter_mask_pallas(rows, conds, interpret=_interpret())
 
 
 def flash_attention(q, k, v, window: int = 0):
     """VMEM-resident flash attention forward (GQA, causal/sliding)."""
+    _check(q, "q", 4)
+    _check(k, "k", 4)
+    _check(v, "v", 4)
+    if k.shape != v.shape:
+        raise ValueError(
+            f"k and v must agree, got {tuple(k.shape)} vs {tuple(v.shape)}")
+    if q.shape[0] != k.shape[0] or q.shape[1] != k.shape[1] \
+            or q.shape[3] != k.shape[3]:
+        raise ValueError(
+            f"q {tuple(q.shape)} incompatible with kv {tuple(k.shape)}: "
+            "batch, sequence and head dims must agree (q: (B,S,H,hd), "
+            "kv: (B,S,Hkv,hd))")
+    if q.shape[2] % k.shape[2] != 0:
+        raise ValueError(
+            f"query heads {q.shape[2]} must be a multiple of kv heads "
+            f"{k.shape[2]} (GQA grouping)")
+    if not isinstance(window, int) or window < 0:
+        raise ValueError(f"window must be a non-negative int, got {window!r}")
     return flash_attention_pallas(q, k, v, window=window,
                                   interpret=_interpret())

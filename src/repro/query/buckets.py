@@ -36,6 +36,7 @@ its siblings.
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 
 import jax
@@ -49,23 +50,38 @@ from repro.query.dag import WorkloadDAG
 
 CAP_CEIL = 1 << 22
 
+# Default LRU bound of the process-global compile cache.  A long-lived
+# TuningSession.retune() loop churns through bucket shapes; without a
+# bound every shape ever compiled stays resident (XLA executables hold
+# device memory) for the life of the process.
+DEFAULT_CACHE_ENTRIES = 512
+
 
 # ----------------------------------------------------------------------
 # persistent compile cache
 # ----------------------------------------------------------------------
 class CompileCache:
-    """Process-global cache of AOT-compiled bucket bodies.
+    """Process-global LRU cache of AOT-compiled bucket bodies.
 
     Keyed by (kind, static signature, operand shape/dtype tuple): the
     key pins everything that affects the traced program, so an entry is
     valid for any executor in the process — rebuilt programs after a
     view hot swap reuse every body whose shape survived.
+
+    Bounded to `max_entries` (LRU eviction): long-lived retune() loops
+    keep only their working set of shapes resident instead of every
+    shape ever compiled.  Evictions surface in `stats()` and through
+    executor telemetry; an evicted body is simply a future cache miss.
     """
 
-    def __init__(self) -> None:
-        self.entries: dict = {}
+    def __init__(self, max_entries: int = DEFAULT_CACHE_ENTRIES) -> None:
+        if max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1, got {max_entries}")
+        self.max_entries = max_entries
+        self.entries: OrderedDict = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
         self.compile_seconds = 0.0
 
     def get(self, key, build_fn, arg_specs):
@@ -74,6 +90,7 @@ class CompileCache:
         ent = self.entries.get(key)
         if ent is not None:
             self.hits += 1
+            self.entries.move_to_end(key)  # most-recently used
             return ent, True, 0.0
         t0 = time.perf_counter()
         compiled = jax.jit(build_fn()).lower(*arg_specs).compile()
@@ -81,17 +98,35 @@ class CompileCache:
         self.entries[key] = compiled
         self.misses += 1
         self.compile_seconds += dt
+        self._evict()
         return compiled, False, dt
+
+    def _evict(self) -> None:
+        while len(self.entries) > self.max_entries:
+            self.entries.popitem(last=False)  # least-recently used
+            self.evictions += 1
+
+    def resize(self, max_entries: int) -> None:
+        """Change the LRU bound in place (evicting immediately if the
+        cache already exceeds the new bound)."""
+        if max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1, got {max_entries}")
+        self.max_entries = max_entries
+        self._evict()
 
     def clear(self) -> None:
         self.entries.clear()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
         self.compile_seconds = 0.0
 
     def stats(self) -> dict:
-        return {"entries": len(self.entries), "hits": self.hits,
+        return {"entries": len(self.entries),
+                "max_entries": self.max_entries,
+                "hits": self.hits,
                 "misses": self.misses,
+                "evictions": self.evictions,
                 "compile_seconds": self.compile_seconds}
 
 
@@ -260,12 +295,91 @@ def _project_body(static):
     return fn
 
 
+def body_builder(bucket: Bucket, use_pallas: bool = False):
+    """The traced body function for one bucket, built from its static
+    signature alone — the same builder `_run_bucket` compiles through
+    the cache, exposed so the jaxpr lint (`repro.analysis.jaxpr_lint`)
+    can trace every body abstractly without executing anything."""
+    if bucket.kind == "scan":
+        return _scan_body(bucket.static, bucket.cap)
+    if bucket.kind == "filter":
+        return _filter_body(bucket.static)
+    if bucket.kind == "join":
+        return _join_body(bucket.static, bucket.cap, use_pallas)
+    if bucket.kind == "project":
+        return _project_body(bucket.static)
+    raise TypeError(bucket.kind)
+
+
 def _specs_of(args) -> tuple:
     return tuple(jax.ShapeDtypeStruct(a.shape, a.dtype) for a in args)
 
 
 def _shape_key(specs) -> tuple:
     return tuple((s.shape, str(s.dtype)) for s in specs)
+
+
+# ----------------------------------------------------------------------
+# capacity planning (shared with the static capacity analyzer)
+# ----------------------------------------------------------------------
+def plan_capacities(dag: WorkloadDAG, stats, view_infos, *,
+                    safety: float = 4.0, cap_planner=None, ests=None,
+                    carry_caps: dict | None = None, content_keys=None):
+    """Plan per-node buffer capacities and static lowering specs.
+
+    Returns (caps, scan_specs, join_specs, demands):
+      caps:    planned output capacity class per node (0 where unsized),
+      scan_specs[nid] = (idx_name, prefix, residual, takes, self_eq),
+      join_specs[nid] = (lcol, rcol, residual, keep_right),
+      demands: estimated row demand each sized buffer must absorb — the
+               quantity `capacity_for` was fed, kept so the static
+               capacity analyzer can re-check headroom without
+               re-deriving the sizing inputs.
+    """
+    if ests is None:
+        ests = cost_mod.estimate_dag(dag, stats, view_infos)
+    if content_keys is None and carry_caps:
+        content_keys = dag.content_keys()
+
+    def _cap(node, rows: float) -> int:
+        if cap_planner is not None:
+            planned = int(cap_planner(node.plan, rows))
+        else:
+            planned = cost_mod.capacity_for(rows, safety=safety)
+        if carry_caps:
+            planned = max(planned,
+                          carry_caps.get(content_keys[node.id], 0))
+        return planned
+
+    caps = [0] * len(dag.nodes)
+    demands = [0.0] * len(dag.nodes)
+    scan_specs: dict[int, tuple] = {}
+    join_specs: dict[int, tuple] = {}
+    for node in dag.nodes:
+        if node.kind == "scan":
+            idx_name, prefix, residual, takes, self_eq, _sorted = \
+                E.atom_scan_spec(node.spec)
+            scan_specs[node.id] = (idx_name, prefix, residual, takes,
+                                   self_eq)
+            demands[node.id] = E.range_cardinality(node.spec, prefix, stats)
+            caps[node.id] = _cap(node, demands[node.id])
+        elif node.kind == "join":
+            lid, rid = node.child_ids
+            pairs = node.spec
+            doms = [max(ests[lid].info.dcol(l), ests[rid].info.dcol(r))
+                    for l, r in pairs]
+            lead_k = max(range(len(doms)), key=lambda i: doms[i])
+            lcol, rcol = pairs[lead_k]
+            residual = tuple(p for k, p in enumerate(pairs)
+                             if k != lead_k)
+            drop = {r for _, r in pairs}
+            keep_right = tuple(i for i in range(dag.nodes[rid].width)
+                               if i not in drop)
+            join_specs[node.id] = (lcol, rcol, residual, keep_right)
+            demands[node.id] = max(
+                ests[lid].rows * ests[rid].rows / doms[lead_k], 1e-3)
+            caps[node.id] = _cap(node, demands[node.id])
+    return caps, scan_specs, join_specs, demands
 
 
 # ----------------------------------------------------------------------
@@ -296,45 +410,12 @@ class BucketedProgram:
             ests = cost_mod.estimate_dag(dag, stats, view_infos)
         self.ests = ests
         self.content_keys = dag.content_keys()
-
-        def _cap(node, rows: float) -> int:
-            if cap_planner is not None:
-                planned = int(cap_planner(node.plan, rows))
-            else:
-                planned = cost_mod.capacity_for(rows, safety=safety)
-            if carry_caps:
-                planned = max(planned,
-                              carry_caps.get(self.content_keys[node.id], 0))
-            return planned
-
-        caps = [0] * len(dag.nodes)
-        scan_specs: dict[int, tuple] = {}
-        join_specs: dict[int, tuple] = {}
-        for node in dag.nodes:
-            if node.kind == "scan":
-                idx_name, prefix, residual, takes, self_eq, _sorted = \
-                    E.atom_scan_spec(node.spec)
-                scan_specs[node.id] = (idx_name, prefix, residual, takes,
-                                       self_eq)
-                caps[node.id] = _cap(
-                    node, E.range_cardinality(node.spec, prefix, stats))
-            elif node.kind == "join":
-                lid, rid = node.child_ids
-                pairs = node.spec
-                doms = [max(ests[lid].info.dcol(l), ests[rid].info.dcol(r))
-                        for l, r in pairs]
-                lead_k = max(range(len(doms)), key=lambda i: doms[i])
-                lcol, rcol = pairs[lead_k]
-                residual = tuple(p for k, p in enumerate(pairs)
-                                 if k != lead_k)
-                drop = {r for _, r in pairs}
-                keep_right = tuple(i for i in range(dag.nodes[rid].width)
-                                   if i not in drop)
-                join_specs[node.id] = (lcol, rcol, residual, keep_right)
-                lead_rows = max(
-                    ests[lid].rows * ests[rid].rows / doms[lead_k], 1e-3)
-                caps[node.id] = _cap(node, lead_rows)
+        caps, scan_specs, join_specs, demands = plan_capacities(
+            dag, stats, view_infos, safety=safety, cap_planner=cap_planner,
+            ests=ests, carry_caps=carry_caps,
+            content_keys=self.content_keys)
         self.caps = caps
+        self.demands = demands
         self.buckets, self.node_bucket = plan_buckets(dag, caps, scan_specs,
                                                       join_specs)
         # stack per-member scan constants once (they never change)
@@ -440,10 +521,10 @@ class BucketedProgram:
     # ------------------------------------------------------------------
     def _run_bucket(self, bucket: Bucket, tt, res, eff_cap):
         dag = self.dag
+        build = lambda: body_builder(bucket, self.use_pallas)
         if bucket.kind == "scan":
             _, idx_name = bucket.static[0], bucket.static[1]
             args = (tt[idx_name], bucket.pvals, bucket.rvals)
-            build = lambda: _scan_body(bucket.static, bucket.cap)
             out_cap = bucket.cap
         elif bucket.kind == "filter":
             kids = [dag.nodes[nid].child_ids[0] for nid in bucket.node_ids]
@@ -453,7 +534,6 @@ class BucketedProgram:
                 [dag.nodes[nid].spec[1] for nid in bucket.node_ids],
                 np.int32))
             args = (cd, cn, co, vals)
-            build = lambda: _filter_body(bucket.static)
             out_cap = cap
         elif bucket.kind == "join":
             lkids = [dag.nodes[nid].child_ids[0] for nid in bucket.node_ids]
@@ -463,21 +543,18 @@ class BucketedProgram:
             ld, ln, lo = self._gather_slot(res, lkids, lcap)
             rd, rn, ro = self._gather_slot(res, rkids, rcap)
             args = (ld, ln, lo, rd, rn, ro)
-            build = lambda: _join_body(bucket.static, bucket.cap,
-                                       self.use_pallas)
             out_cap = bucket.cap
         elif bucket.kind == "project":
             kids = [dag.nodes[nid].child_ids[0] for nid in bucket.node_ids]
             cap = max(eff_cap[c] for c in kids)
             cd, cn, co = self._gather_slot(res, kids, cap)
             args = (cd, cn, co)
-            build = lambda: _project_body(bucket.static)
             out_cap = cap
         else:
             raise TypeError(bucket.kind)
 
         specs = _specs_of(args)
-        key = (bucket.static, bucket.cap, self.use_pallas, _shape_key(specs))
+        key = self.cache_key(bucket, specs)
         compiled, cached, dt = _CACHE.get(key, build, specs)
         if cached:
             self.cache_hits += 1
@@ -536,6 +613,81 @@ class BucketedProgram:
                 out, i = entry
                 roots[name] = E.PRel(out.data[i], out.n[i], out.overflow[i])
         return roots, own
+
+    # ------------------------------------------------------------------
+    # static views of the program (no execution) — jaxpr lint hooks
+    # ------------------------------------------------------------------
+    def static_eff_caps(self, view_caps: dict[int, int] | None = None
+                        ) -> list[int]:
+        """Effective buffer capacity per node, computed exactly like
+        `execute` propagates it but without touching the device: views
+        take `view_caps[vid]` (falling back to a capacity class planned
+        from the estimated extent rows), scans/joins their bucket's
+        capacity class, filters/projects the max of their child caps."""
+        view_caps = view_caps or {}
+        eff: list[int] = [0] * len(self.dag.nodes)
+        for node in self.dag.nodes:
+            if node.kind == "view":
+                eff[node.id] = view_caps.get(
+                    node.spec,
+                    cost_mod.capacity_for(self.ests[node.id].rows,
+                                          safety=1.0))
+        for bucket in self.buckets:
+            for nid in bucket.node_ids:
+                node = self.dag.nodes[nid]
+                if bucket.kind in ("scan", "join"):
+                    eff[nid] = bucket.cap
+                else:  # filter/project pass through their child's cap
+                    eff[nid] = max(eff[c] for c in node.child_ids)
+        return eff
+
+    def abstract_args(self, bucket: Bucket, n_tt: int,
+                      eff_cap: list[int]) -> tuple:
+        """ShapeDtypeStructs of the operands `_run_bucket` would stack
+        for this bucket — enough to trace the body with `make_jaxpr` /
+        `eval_shape` without any device data.  `n_tt` is the triple
+        count (scan buckets read one sorted (n_tt, 3) index)."""
+        dag = self.dag
+        B = len(bucket.node_ids)
+        i32, b1 = np.dtype(np.int32), np.dtype(bool)
+
+        def slot(kids, cap: int, width: int) -> tuple:
+            return (jax.ShapeDtypeStruct((B, cap, width), i32),
+                    jax.ShapeDtypeStruct((B,), i32),
+                    jax.ShapeDtypeStruct((B,), b1))
+
+        if bucket.kind == "scan":
+            pw = 0 if bucket.pvals is None else bucket.pvals.shape[1]
+            rw = 0 if bucket.rvals is None else bucket.rvals.shape[1]
+            return (jax.ShapeDtypeStruct((n_tt, 3), i32),
+                    jax.ShapeDtypeStruct((B, pw), i32),
+                    jax.ShapeDtypeStruct((B, rw), i32))
+        if bucket.kind == "filter":
+            kids = [dag.nodes[nid].child_ids[0] for nid in bucket.node_ids]
+            cap = max(eff_cap[c] for c in kids)
+            _, _ci, width = bucket.static
+            return slot(kids, cap, width) + (
+                jax.ShapeDtypeStruct((B,), i32),)
+        if bucket.kind == "join":
+            lkids = [dag.nodes[nid].child_ids[0] for nid in bucket.node_ids]
+            rkids = [dag.nodes[nid].child_ids[1] for nid in bucket.node_ids]
+            lcap = max(eff_cap[c] for c in lkids)
+            rcap = max(eff_cap[c] for c in rkids)
+            lw, rw = bucket.static[5], bucket.static[6]
+            return slot(lkids, lcap, lw) + slot(rkids, rcap, rw)
+        if bucket.kind == "project":
+            kids = [dag.nodes[nid].child_ids[0] for nid in bucket.node_ids]
+            cap = max(eff_cap[c] for c in kids)
+            cw = bucket.static[3]
+            return slot(kids, cap, cw)
+        raise TypeError(bucket.kind)
+
+    def cache_key(self, bucket: Bucket, specs) -> tuple:
+        """The persistent-cache key `_run_bucket` would use for this
+        bucket with operands of `specs` shapes (lint checks hashability
+        and cross-bucket collision-freedom of exactly these keys)."""
+        return (bucket.static, bucket.cap, self.use_pallas,
+                _shape_key(specs))
 
     # ------------------------------------------------------------------
     def telemetry(self) -> dict:

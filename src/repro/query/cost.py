@@ -279,6 +279,34 @@ def capacity_for(rows_estimate: float, safety: float = 4.0, floor: int = 128,
     return int(min(max(cap, floor), ceil))
 
 
+def promotion_chain(cap: int, ceil: int = 1 << 22,
+                    max_steps: int = 64) -> list[int]:
+    """The full capacity-class ladder from `cap` (exclusive) to the
+    ceiling, as the adaptive driver would climb it one overflow at a
+    time.  Statically bounds the overflow→promote→recompile cycle: the
+    chain must be strictly increasing and terminate at the ceiling
+    within `max_steps`, else the promotion logic itself is broken and
+    the driver would recompile forever.  Raises InvariantViolation on an
+    unbounded or non-monotonic chain (the capacity analyzer also reports
+    this as a finding)."""
+    from repro.errors import InvariantViolation
+
+    chain: list[int] = []
+    cur = cap
+    for _ in range(max_steps):
+        nxt = promote_capacity(cur, ceil)
+        if nxt <= cur:
+            if cur < ceil:
+                raise InvariantViolation(
+                    f"promotion stalled at {cur} below the ceiling {ceil}")
+            return chain
+        chain.append(nxt)
+        cur = nxt
+    raise InvariantViolation(
+        f"promotion chain from {cap} did not reach the ceiling {ceil} "
+        f"within {max_steps} steps")
+
+
 def promote_capacity(cap: int, ceil: int = 1 << 22) -> int:
     """Next capacity class above `cap` (classes are powers of two, so
     promotion doubles).  Returns `cap` unchanged once the ceiling is

@@ -46,6 +46,26 @@ class DagNode:
     plan: Plan  # representative subtree (first interned); for debugging
 
 
+def derived_width(kind: str, spec, child_widths: tuple[int, ...]) -> int:
+    """Output width an operator MUST have, derived from its spec and its
+    children's widths — the single source of truth shared by the interner
+    and the static IR verifier (`repro.analysis.ir_verifier`).  `view`
+    widths are not derivable from the spec (a view id); callers check
+    those against the representative plan's schema instead."""
+    if kind == "scan":
+        return len(TTScan(spec).columns())
+    if kind == "filter":
+        return child_widths[0]
+    if kind == "join":
+        drop = {r for _, r in spec}
+        return child_widths[0] + sum(
+            1 for i in range(child_widths[1]) if i not in drop)
+    if kind == "project":
+        idxs, _dedupe = spec
+        return len(idxs)
+    raise TypeError(kind)
+
+
 def _atom_key(atom) -> tuple:
     """Renaming-invariant atom encoding: constants by id, variables by
     first-occurrence ordinal (captures self-join positions)."""
@@ -103,9 +123,9 @@ class WorkloadDAG:
             # pair order never changes the output relation, so sort it out
             # of the key (the spec keeps the original order for lead choice)
             key = ("join", lid, rid, tuple(sorted(pairs)))
-            drop = {r for _, r in pairs}
-            width = self.nodes[lid].width + sum(
-                1 for i in range(self.nodes[rid].width) if i not in drop)
+            width = derived_width(
+                "join", pairs,
+                (self.nodes[lid].width, self.nodes[rid].width))
             return self._get_or_add(key, "join", pairs, (lid, rid), width, plan)
         if isinstance(plan, Project):
             cid = self.intern(plan.child)

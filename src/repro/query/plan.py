@@ -174,6 +174,52 @@ def remap_view(plan: Plan, old_vid: int, new_vid: int,
     raise TypeError(type(plan))
 
 
+def validate_plan(plan: Plan) -> list[str]:
+    """Structural well-formedness of a plan tree: every column an
+    operator references must exist in its child's output, join pairs and
+    projections must resolve, and ViewRef schemas must be duplicate-free.
+    Returns a list of human-readable problems (empty when sound) — the
+    static IR verifier turns these into findings instead of letting a
+    malformed plan surface as a KeyError mid-compile."""
+    problems: list[str] = []
+    if isinstance(plan, ViewRef):
+        if len(set(plan.schema)) != len(plan.schema):
+            problems.append(
+                f"ViewRef(v{plan.view_id}) schema has duplicate columns: "
+                f"{plan.schema}")
+    elif isinstance(plan, TTScan):
+        if not plan.columns() and not any(
+                isinstance(t, Const) for t in plan.atom.terms()):
+            problems.append(f"TTScan {plan.atom!r} has no output columns "
+                            "and no constants (empty pattern)")
+    elif isinstance(plan, Filter):
+        if plan.col not in plan.child.columns():
+            problems.append(
+                f"Filter references column {plan.col!r} absent from child "
+                f"output {plan.child.columns()}")
+    elif isinstance(plan, EquiJoin):
+        lcols, rcols = plan.left.columns(), plan.right.columns()
+        for l, r in plan.pairs:
+            if l not in lcols:
+                problems.append(f"EquiJoin left column {l!r} absent from "
+                                f"{lcols}")
+            if r not in rcols:
+                problems.append(f"EquiJoin right column {r!r} absent from "
+                                f"{rcols}")
+    elif isinstance(plan, Project):
+        ccols = plan.child.columns()
+        for c in plan.cols:
+            if c not in ccols:
+                problems.append(f"Project column {c!r} absent from child "
+                                f"output {ccols}")
+    else:
+        problems.append(f"unknown plan operator {type(plan).__name__}")
+        return problems
+    for child in plan.children():
+        problems.extend(validate_plan(child))
+    return problems
+
+
 def iter_subplans(plan: Plan):
     """Pre-order traversal over every operator of a plan tree."""
     yield plan

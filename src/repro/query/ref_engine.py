@@ -8,6 +8,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.queries import CQ, Const, Var
+from repro.errors import InvariantViolation
 from repro.query.plan import EquiJoin, Filter, Plan, Project, TTScan, ViewRef
 from repro.rdf.triples import TripleStore
 
@@ -66,13 +67,17 @@ def execute(plan: Plan, store: TripleStore | None,
             views: dict[int, Relation] | None = None) -> Relation:
     views = views or {}
     if isinstance(plan, TTScan):
-        assert store is not None, "TTScan requires a triple store"
+        if store is None:
+            raise InvariantViolation("TTScan requires a triple store")
         return scan_atom(store, plan.atom)
     if isinstance(plan, ViewRef):
         ext = views[plan.view_id]
         if ext.cols != plan.schema:
             # align by position (extent columns follow the view head order)
-            assert len(ext.cols) == len(plan.schema), (ext.cols, plan.schema)
+            if len(ext.cols) != len(plan.schema):
+                raise InvariantViolation(
+                    f"view {plan.view_id} extent arity {ext.cols} does not "
+                    f"match reference schema {plan.schema}")
             return Relation(ext.rows, plan.schema)
         return ext
     if isinstance(plan, Filter):

@@ -20,6 +20,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.state import State
+from repro.errors import InvariantViolation
 from repro.query import engine as E
 from repro.query import ref_engine as R
 from repro.query.cost import RelInfo, capacity_for
@@ -98,7 +99,9 @@ def materialize_state_delta(state: State, store: TripleStore,
         if pvid is not None:
             prev_view = prev_state.views[pvid]
             iso = isomorphism(prev_view.cq, view.cq)  # prev var -> new var
-            assert iso is not None, "equal canonical keys must be isomorphic"
+            if iso is None:
+                raise InvariantViolation(
+                    "equal canonical keys must be isomorphic")
             old_idx = {h.name: i for i, h in enumerate(prev_view.cq.head)}
             inv = {nv: pv for pv, nv in iso.items()}
             perm = [old_idx[inv[h].name] for h in view.cq.head]

@@ -1,0 +1,354 @@
+"""Static-analysis subsystem: each analyzer family must (a) stay silent
+on sound inputs and (b) catch a deliberately seeded defect."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (analyze_capacity, analyze_repo, check_cache_keys,
+                            check_source, lint_program, lint_traced,
+                            verify_dag)
+from repro.core.queries import Atom, Const, Var
+from repro.errors import InvariantViolation, require
+from repro.query import cost as cost_mod
+from repro.query import ref_engine as R
+from repro.query.buckets import BucketedProgram, CompileCache
+from repro.query.dag import build_dag
+from repro.query.plan import EquiJoin, Filter, TTScan, rename_columns
+from repro.query.workload import WorkloadExecutor
+from repro.rdf.triples import TripleStore
+
+
+def _store() -> TripleStore:
+    triples = [(s, 1, 10 + s % 3) for s in range(6)]
+    triples += [(s, 2, s - 9) for s in range(10, 14)]
+    return TripleStore(np.array(triples, np.int32))
+
+
+def _plans():
+    x, y, z = Var("x"), Var("y"), Var("z")
+    scan1 = TTScan(Atom(x, Const(1), y))
+    scan2 = TTScan(Atom(y, Const(2), z))
+    return {"q_join": EquiJoin(scan1, scan2, (("y", "y"),)),
+            "q_filt": Filter(scan1, "y", 10)}
+
+
+def _dag():
+    return build_dag(_plans())
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# ----------------------------------------------------------------------
+# IR verifier
+# ----------------------------------------------------------------------
+def test_verify_dag_clean():
+    assert verify_dag(_dag(), expected_members={"q_join", "q_filt"}) == []
+
+
+def test_ir_catches_corrupt_width():
+    dag = _dag()
+    join_id = dag.roots["q_join"]
+    dag.nodes[join_id] = dataclasses.replace(
+        dag.nodes[join_id], width=dag.nodes[join_id].width + 2)
+    assert _rules(verify_dag(dag)) == {"ir/width"}
+
+
+def test_ir_catches_cycle():
+    dag = _dag()
+    filt_id = dag.roots["q_filt"]
+    dag.nodes[filt_id] = dataclasses.replace(
+        dag.nodes[filt_id], child_ids=(filt_id,))
+    assert "ir/cycle" in _rules(verify_dag(dag))
+
+
+def test_ir_catches_key_collision():
+    dag = _dag()
+    scan = dag.nodes[0]
+    # a second live node with the same content, hidden from the interner
+    # behind a divergent structural key — exactly the corruption the
+    # canonical-key machinery must never let happen
+    dup = dataclasses.replace(scan, id=len(dag.nodes),
+                              key=("scan", ("corrupt",)))
+    dag.nodes.append(dup)
+    dag.consumers[dup.id] = 0
+    assert "ir/key-collision" in _rules(verify_dag(dag))
+
+
+def test_ir_catches_corrupt_key_structure():
+    dag = _dag()
+    filt_id = dag.roots["q_filt"]
+    node = dag.nodes[filt_id]
+    ci, value = node.spec
+    dag.nodes[filt_id] = dataclasses.replace(
+        node, key=("filter", node.child_ids[0], ci + 1, value))
+    assert _rules(verify_dag(dag)) == {"ir/key-structure"}
+
+
+def test_ir_catches_missing_root():
+    findings = verify_dag(_dag(), expected_members={"q_join", "q_gone"})
+    assert _rules(findings) == {"ir/root-coverage"}
+    assert "q_gone" in findings[0].location
+
+
+def test_ir_catches_consumer_drift():
+    dag = _dag()
+    dag.consumers[0] += 1
+    assert _rules(verify_dag(dag)) == {"ir/consumers"}
+
+
+# ----------------------------------------------------------------------
+# canonical-key soundness (deterministic; randomized twin lives in
+# test_properties.py under hypothesis)
+# ----------------------------------------------------------------------
+def test_renamed_plans_intern_to_same_node_with_equal_answers():
+    store = _store()
+    plans = _plans()
+    renamed = {name: rename_columns(p, {"x": "a", "y": "b", "z": "c"})
+               for name, p in plans.items()}
+    dag = build_dag({**plans,
+                     **{f"{n}_renamed": p for n, p in renamed.items()}})
+    for name, plan in plans.items():
+        assert dag.roots[name] == dag.roots[f"{name}_renamed"]
+        got = sorted(map(tuple, R.execute(plan, store).rows.tolist()))
+        want = sorted(map(tuple,
+                          R.execute(renamed[name], store).rows.tolist()))
+        assert got == want
+    assert verify_dag(dag) == []
+
+
+# ----------------------------------------------------------------------
+# capacity analyzer
+# ----------------------------------------------------------------------
+def test_capacity_clean_on_planned_caps():
+    store = _store()
+    assert analyze_capacity(_dag(), store.stats, {}) == []
+
+
+def test_capacity_catches_seeded_hazards():
+    dag = _dag()
+    stats = _store().stats
+    n = len(dag.nodes)
+    scan_ids = [nd.id for nd in dag.nodes if nd.kind == "scan"]
+    join_id = dag.roots["q_join"]
+
+    caps = [128] * n
+    caps[scan_ids[0]] = 100           # not a power of two
+    demands = [10.0] * n
+    demands[join_id] = float(1 << 23)  # beyond the ceiling
+    rules = _rules(analyze_capacity(dag, stats, {}, caps=caps,
+                                    demands=demands))
+    assert {"cap/invalid", "cap/ceiling"} <= rules
+
+    caps = [128] * n
+    demands = [10.0] * n
+    demands[join_id] = 1000.0          # overflow predicted on first run
+    demands[scan_ids[1]] = 100.0       # < 2x headroom
+    findings = analyze_capacity(dag, stats, {}, caps=caps, demands=demands)
+    assert {"cap/undersized", "cap/headroom"} <= _rules(findings)
+    assert all(f.severity == "warning" for f in findings)
+
+
+def test_promotion_chain_bounded():
+    chain = cost_mod.promotion_chain(128)
+    assert chain[0] == 256 and chain[-1] == 1 << 22
+    assert all(b == 2 * a for a, b in zip([128] + chain, chain))
+    assert cost_mod.promotion_chain(1 << 22) == []
+
+
+# ----------------------------------------------------------------------
+# jaxpr lint
+# ----------------------------------------------------------------------
+def test_lint_program_clean_on_real_buckets():
+    store = _store()
+    dag = _dag()
+    program = BucketedProgram(dag, store.stats, {})
+    assert lint_program(program, n_tt=len(store)) == []
+
+
+def test_lint_catches_float64_promotion():
+    spec = jax.ShapeDtypeStruct((4,), jnp.int32)
+    jax.config.update("jax_enable_x64", True)
+    try:
+        findings = lint_traced(lambda x: x.astype(jnp.float64) * 2.0, (spec,))
+    finally:
+        jax.config.update("jax_enable_x64", False)
+    assert "jaxpr/float64" in _rules(findings)
+
+
+def test_lint_catches_float_in_engine_body():
+    spec = jax.ShapeDtypeStruct((4,), jnp.int32)
+    findings = lint_traced(lambda x: (x * 1.5).astype(jnp.int32), (spec,))
+    assert _rules(findings) == {"jaxpr/weak-float"}
+    assert lint_traced(lambda x: (x * 1.5).astype(jnp.int32), (spec,),
+                       forbid_floats=False) == []
+
+
+def test_lint_catches_host_callback():
+    spec = jax.ShapeDtypeStruct((4,), jnp.int32)
+
+    def body(x):
+        return jax.pure_callback(
+            lambda a: a, jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+
+    assert "jaxpr/callback" in _rules(lint_traced(body, (spec,)))
+
+
+def test_lint_reports_trace_failure():
+    def broken(x):
+        raise ValueError("boom")
+
+    findings = lint_traced(broken, (jax.ShapeDtypeStruct((2,), jnp.int32),))
+    assert _rules(findings) == {"jaxpr/trace-error"}
+    assert "boom" in findings[0].message
+
+
+def test_cache_key_checks():
+    good = [(("sig_a",), ("key_a",), "a"), (("sig_b",), ("key_b",), "b")]
+    assert check_cache_keys(good) == []
+    collide = [(("sig_a",), ("key",), "a"), (("sig_b",), ("key",), "b")]
+    assert _rules(check_cache_keys(collide)) == {"jaxpr/key-collision"}
+    unhashable = [(("sig",), ["list", "key"], "c")]
+    assert _rules(check_cache_keys(unhashable)) == {"jaxpr/key-unhashable"}
+
+
+# ----------------------------------------------------------------------
+# repo rules
+# ----------------------------------------------------------------------
+def test_rules_catch_bare_assert():
+    src = "def f(x):\n    assert x > 0\n    return x\n"
+    assert _rules(check_source(src, "m.py")) == {"rules/bare-assert"}
+    allowed = "def f(x):\n    assert x > 0  # lint: allow-assert\n"
+    assert check_source(allowed, "m.py") == []
+
+
+def test_rules_catch_mutable_default():
+    assert _rules(check_source("def f(x, acc=[]):\n    return acc\n",
+                               "m.py")) == {"rules/mutable-default"}
+    assert _rules(check_source("def f(x, *, acc=dict()):\n    return acc\n",
+                               "m.py")) == {"rules/mutable-default"}
+    assert check_source("def f(x, acc=None):\n    return acc\n", "m.py") == []
+
+
+def test_rules_catch_unhashable_static_arg():
+    src = (
+        "from functools import partial\n"
+        "import jax\n\n"
+        "@partial(jax.jit, static_argnames=('cfg',))\n"
+        "def f(x, cfg={}):\n"
+        "    return x\n"
+    )
+    assert "rules/unhashable-static" in _rules(check_source(src, "m.py"))
+    src_nums = (
+        "import jax\n\n"
+        "def g(x, opts=[]):\n"
+        "    return x\n\n"
+        "g_jit = jax.jit(g, static_argnums=(1,))\n"
+    )
+    rules = _rules(check_source(src_nums, "m.py"))
+    assert {"rules/unhashable-static", "rules/mutable-default"} <= rules
+
+
+def test_repo_rules_clean_on_library():
+    report = analyze_repo()
+    assert report.clean(), report.format()
+    assert report.checked["files"] > 20
+
+
+# ----------------------------------------------------------------------
+# typed exceptions (python -O safe)
+# ----------------------------------------------------------------------
+def test_require_raises_typed_invariant():
+    require(True, "fine")
+    with pytest.raises(InvariantViolation, match="broken"):
+        require(False, "broken")
+    assert issubclass(InvariantViolation, RuntimeError)
+
+
+# ----------------------------------------------------------------------
+# bounded compile cache
+# ----------------------------------------------------------------------
+def test_compile_cache_lru_eviction():
+    cache = CompileCache(max_entries=2)
+    spec = (jax.ShapeDtypeStruct((2,), jnp.int32),)
+
+    def build(k):
+        return lambda: (lambda x: x + k)
+
+    for k in range(3):
+        _, cached, _ = cache.get(("k", k), build(k), spec)
+        assert not cached
+    s = cache.stats()
+    assert s["entries"] == 2 and s["evictions"] == 1 and s["misses"] == 3
+    # ("k", 0) was least-recently used → gone; ("k", 2) survives
+    _, cached, _ = cache.get(("k", 2), build(2), spec)
+    assert cached
+    _, cached, _ = cache.get(("k", 0), build(0), spec)
+    assert not cached
+    cache.resize(1)
+    assert cache.stats()["entries"] == 1
+    with pytest.raises(ValueError):
+        cache.resize(0)
+
+
+def test_executor_telemetry_exposes_cache_stats():
+    store = _store()
+    ex = WorkloadExecutor(_dag(), store.stats, {})
+    t = ex.telemetry()
+    for key in ("entries", "max_entries", "hits", "misses", "evictions"):
+        assert key in t["compile_cache"]
+
+
+# ----------------------------------------------------------------------
+# ops wrappers validate operands up front
+# ----------------------------------------------------------------------
+def test_ops_validation_errors():
+    from repro.kernels import ops
+
+    with pytest.raises(TypeError, match="probe must be int32"):
+        ops.join_count(jnp.zeros(4, jnp.float32), jnp.zeros(4, jnp.int32))
+    with pytest.raises(ValueError, match="must be 1-D"):
+        ops.join_count(jnp.zeros((4, 1), jnp.int32), jnp.zeros(4, jnp.int32))
+    with pytest.raises(ValueError, match="must be 2-D"):
+        ops.filter_mask(jnp.zeros(4, jnp.int32), ((0, 1),))
+    with pytest.raises(ValueError, match="out of range"):
+        ops.filter_mask(jnp.zeros((4, 2), jnp.int32), ((5, 1),))
+    with pytest.raises(TypeError, match="static"):
+        ops.filter_mask(jnp.zeros((4, 2), jnp.int32), ((jnp.int32(0), 1),))
+    q = jnp.zeros((1, 128, 4, 8), jnp.float32)
+    kv = jnp.zeros((1, 128, 2, 8), jnp.float32)
+    with pytest.raises(ValueError, match="4-D"):
+        ops.flash_attention(q[0], kv, kv)
+    with pytest.raises(ValueError, match="k and v must agree"):
+        ops.flash_attention(q, kv, kv[:, :64])
+    with pytest.raises(ValueError, match="multiple of kv heads"):
+        ops.flash_attention(q, kv[:, :, :1][:, :, [0, 0, 0]], kv[:, :, [0, 0, 0]])
+    with pytest.raises(ValueError, match="window"):
+        ops.flash_attention(q, kv, kv, window=-1)
+
+
+# ----------------------------------------------------------------------
+# CLI + session entry points
+# ----------------------------------------------------------------------
+def test_cli_rules_only_passes(capsys):
+    from repro.analysis.cli import run
+
+    assert run(["--rules-only", "--strict"]) == 0
+    out = capsys.readouterr().out
+    assert "analysis: clean" in out
+
+
+def test_analyze_state_on_tuned_session():
+    from repro.analysis import analyze_state
+    from repro.analysis.cli import build_session
+
+    session = build_session("quickstart", max_states=10)
+    report = analyze_state(session.best, session.store.stats)
+    assert report.ok, report.format()
+    assert report.checked["nodes"] > 0 and report.checked["buckets"] > 0
+    # session.verify() routes the unapplied session through the same path
+    assert session.verify().ok

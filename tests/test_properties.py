@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
-from hypothesis import HealthCheck, given, settings
+from hypothesis import HealthCheck, assume, given, settings
 from hypothesis import strategies as st
 
 import jax.numpy as jnp
@@ -102,6 +102,46 @@ def test_capacity_planner_properties(rows, safety):
     assert cap >= min(rows * safety, 1 << 22) * 0.999 or cap == 1 << 22
     assert cap & (cap - 1) == 0  # power of two
     assert 128 <= cap <= 1 << 22
+
+
+# ----------------------------------------------------------------------
+# workload-DAG canonical-key soundness: interning two plans to one node
+# must be answer-preserving, and renaming columns must not split nodes
+# ----------------------------------------------------------------------
+@settings(max_examples=40, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(seed=st.integers(0, 10**6), n_atoms=st.integers(1, 3),
+       n_vars=st.integers(1, 4))
+def test_dag_canonical_keys_sound(seed, n_atoms, n_vars):
+    from repro.analysis import verify_dag
+    from repro.query import ref_engine as R
+    from repro.query.dag import build_dag
+    from repro.query.plan import (has_cartesian, plan_for_cq,
+                                  rename_columns)
+    from repro.rdf.triples import TripleStore
+
+    rng = np.random.default_rng(seed)
+    cq = _random_cq(rng, n_atoms, n_vars, 4)
+    plan = plan_for_cq(cq)
+    assume(not has_cartesian(plan))  # oracle-only; never reaches the DAG
+
+    # bijectively rename every column: the positional canonicalization
+    # must intern both plans to the SAME node...
+    mapping = {v.name: f"w{i}" for i, v in enumerate(cq.all_vars())}
+    renamed = rename_columns(plan, mapping)
+    dag = build_dag({"orig": plan, "renamed": renamed})
+    assert dag.roots["orig"] == dag.roots["renamed"]
+
+    # ...the merged DAG must pass the static IR verifier...
+    assert verify_dag(dag, expected_members={"orig", "renamed"}) == []
+
+    # ...and equal DagNode keys must mean identical reference-engine
+    # answers (positionally — shared buffers are read by column index)
+    triples = rng.integers(0, 4, size=(40, 3)).astype(np.int32)
+    store = TripleStore(triples)
+    got = sorted(map(tuple, R.execute(plan, store).rows.tolist()))
+    want = sorted(map(tuple, R.execute(renamed, store).rows.tolist()))
+    assert got == want
 
 
 # ----------------------------------------------------------------------

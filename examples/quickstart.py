@@ -66,3 +66,46 @@ print(f"{swap.summary()} — in {dt:.2f}s, serving uninterrupted")
 for q in workload[1:]:
     assert session.answer(q.name) == session.executor.answer_group_direct(q.name)
 print("remaining workload still answered exactly")
+
+# 6) the graph never stops changing: stream write batches through the
+# staleness-bounded server — small deltas maintain the views
+# incrementally (no re-materialization), queries stay at most
+# `staleness_budget` pending triples stale, and a bursty write pattern
+# trips the drift detector into an automatic retune
+import numpy as np
+
+from repro.api import MaintenanceConfig
+
+rng = np.random.default_rng(7)
+tt = session.store.triples
+
+
+def write_batch(size: int, pred: int | None = None) -> np.ndarray:
+    rows = tt[rng.choice(len(tt), size)].copy()
+    rows[:, 2] = rows[::-1, 2]  # recombine: mostly-novel triples
+    if pred is not None:
+        rows[:, 1] = pred
+    return rows
+
+
+server = session.serve(maintenance=MaintenanceConfig(
+    staleness_budget=64, drift_window=3, drift_rate_factor=2.0,
+    drift_min_triples=32))
+probe = workload[1].name
+for _ in range(4):                      # steady trickle of writes
+    server.submit(inserts=write_batch(8))
+    server.answer_batch([probe])
+hot_pred = int(tt[0, 1])
+for _ in range(5):                      # write burst on one predicate
+    server.submit(inserts=write_batch(96, pred=hot_pred))
+    server.answer_batch([probe])
+server.flush()
+st = server.stats
+print(f"\nstreamed {st.updates_submitted} triples in {st.refreshes} "
+      f"maintenance passes ({st.maintenance_seconds*1e3:.0f} ms), "
+      f"served at most {st.max_staleness_served} triples stale, "
+      f"drift retunes: {st.drift_retunes}")
+assert st.max_staleness_served <= 64
+assert server.answer_batch([probe])[0] \
+    == session.executor.answer_group_direct(probe)
+print("views stayed exact under the write stream")

@@ -9,6 +9,9 @@ Four analyzer families over a tuned workload and the library source:
   * `jaxpr_lint`   — abstract traces of every bucket body checked
     against the engine contract (int32/bool, static shapes, no host
     callbacks) plus compile-cache key soundness
+  * `maintenance_check` — streaming-update envelope: delta capacity
+    classes, extent/TT growth headroom under the configured update
+    rate, oracle-fallback maintenance, host/device alignment
   * `repo_rules`   — AST lint of the library source (bare asserts,
     mutable defaults, unhashable jit static args)
 
@@ -22,12 +25,13 @@ from repro.analysis.driver import (analyze_repo, analyze_state,
 from repro.analysis.findings import SEVERITIES, AnalysisReport, Finding
 from repro.analysis.ir_verifier import verify_dag
 from repro.analysis.jaxpr_lint import check_cache_keys, lint_program, lint_traced
+from repro.analysis.maintenance_check import analyze_maintenance
 from repro.analysis.repo_rules import check_source, run_repo_rules
 
 __all__ = [
     "SEVERITIES", "AnalysisReport", "Finding",
-    "analyze_capacity", "analyze_repo", "analyze_state",
-    "analyze_workload", "check_cache_keys", "check_source",
-    "lint_program", "lint_traced", "run_repo_rules", "verify_dag",
-    "verify_session",
+    "analyze_capacity", "analyze_maintenance", "analyze_repo",
+    "analyze_state", "analyze_workload", "check_cache_keys",
+    "check_source", "lint_program", "lint_traced", "run_repo_rules",
+    "verify_dag", "verify_session",
 ]

@@ -23,7 +23,8 @@ from __future__ import annotations
 import os
 
 from repro.analysis import capacity as capacity_mod
-from repro.analysis import ir_verifier, jaxpr_lint, repo_rules
+from repro.analysis import (ir_verifier, jaxpr_lint, maintenance_check,
+                            repo_rules)
 from repro.analysis.findings import AnalysisReport
 from repro.query import cost as cost_mod
 from repro.query.dag import WorkloadDAG, build_dag
@@ -83,6 +84,8 @@ def analyze_state(state, stats, *, use_pallas: bool = False,
     report = analyze_workload(dag, stats, view_infos, program=program,
                               n_tt=n_tt,
                               expected_members=set(device_plans))
+    report.extend(maintenance_check.analyze_maintenance(state, stats),
+                  count_key="maint_views", count=len(state.views))
     if oracle:
         report.checked["oracle_fallbacks"] = oracle
     return report
@@ -111,6 +114,16 @@ def verify_session(session, *, n_tt: int | None = None) -> AnalysisReport:
             ex.dag, stats, ex.infos, program=program,
             n_tt=n_tt if n_tt is not None else int(ex.tt["spo"].shape[0]),
             view_caps=view_caps, expected_members=expected)
+        maintainer = getattr(session, "_maintainer", None)
+        if maintainer is not None and maintainer.executor is ex:
+            # live maintenance envelope: real buffer classes, host
+            # mirrors and measured per-triple costs
+            maint = maintenance_check.analyze_maintenance(
+                maintainer=maintainer)
+        else:
+            maint = maintenance_check.analyze_maintenance(ex.state, stats)
+        report.extend(maint, count_key="maint_views",
+                      count=len(ex.state.views))
         if ex._oracle_names:
             report.checked["oracle_fallbacks"] = len(ex._oracle_names)
         return report

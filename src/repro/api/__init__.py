@@ -8,9 +8,10 @@ Everything else under `repro.*` is engine internals and may change
 between releases.  `repro.core.wizard.tune` remains as a deprecated
 one-shot shim over a throwaway `TuningSession`.
 """
-from repro.core.quality import QualityWeights
+from repro.core.quality import MaintenanceCostModel, QualityWeights
 from repro.core.search import SearchConfig
 from repro.core.wizard import WizardConfig
+from repro.maintenance import Delta, MaintenanceConfig
 
 from repro.api.session import (ApplyReport, RetuneReport,  # noqa: F401
                                TuningSession)
@@ -22,4 +23,7 @@ __all__ = [
     "WizardConfig",
     "SearchConfig",
     "QualityWeights",
+    "MaintenanceCostModel",
+    "MaintenanceConfig",
+    "Delta",
 ]

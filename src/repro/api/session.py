@@ -29,13 +29,14 @@ from __future__ import annotations
 
 import json
 import os
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.core.executor import QueryExecutor
-from repro.core.quality import QualityBreakdown, quality
+from repro.core.quality import (MaintenanceCostModel, QualityBreakdown,
+                                quality)
 from repro.core.queries import CQ
 from repro.core.reformulation import infer_type_id, reformulate_workload
 from repro.core.search import SearchResult, search
@@ -104,6 +105,13 @@ class TuningSession:
         self._best_quality: QualityBreakdown | None = None
         self._applied: State | None = None
         self.executor: QueryExecutor | None = None
+        # measured per-view maintenance costs (EWMA units/triple, keyed
+        # by canonical view key).  A streaming `ViewMaintainer` — bound
+        # via serve(maintenance=) or ingest() — shares this object and
+        # fills it in; once populated, retune() optimizes against the
+        # MEASURED costs instead of the static estimate.
+        self.maintenance_costs = MaintenanceCostModel()
+        self._maintainer = None
 
     # ------------------------------------------------------------------
     # workload evolution
@@ -158,6 +166,15 @@ class TuningSession:
                                         self.cfg.max_reformulations)
         return self.workload, {q.name: [q.name] for q in self.workload}
 
+    def _search_cfg(self):
+        """The session's search config with measured maintenance costs
+        (if a maintainer has observed any) overriding the static
+        estimate in the quality objective."""
+        if len(self.maintenance_costs):
+            return replace(self.cfg.search,
+                           maint_model=self.maintenance_costs)
+        return self.cfg.search
+
     def retune(self) -> RetuneReport:
         """Re-run the States Navigator against the current workload.
 
@@ -187,8 +204,10 @@ class TuningSession:
             added = [m.name for m in grafts]
             if grafts:
                 seed = graft_queries(seed, grafts)
-        seed_q = quality(seed, self.store.stats, self.cfg.search.weights)
-        result = search(seed, self.store.stats, self.cfg.search)
+        cfg = self._search_cfg()
+        seed_q = quality(seed, self.store.stats, cfg.weights,
+                         cfg.maint_model)
+        result = search(seed, self.store.stats, cfg)
         self._best, self._best_quality = result.best, result.best_quality
         self._groups = groups
         return RetuneReport(result=result, seed=seed, seed_quality=seed_q,
@@ -229,6 +248,10 @@ class TuningSession:
             swap = self.executor.swap_state(self._best, self._groups,
                                             warm=warm)
             report = ApplyReport(full=False, **swap)
+            if self._maintainer is not None:
+                # same executor object, new view set: rebuild delta plans
+                # and re-establish the capacity-class invariants
+                self._maintainer.rebind(self.executor)
         self._applied = self._best
         return report
 
@@ -251,13 +274,51 @@ class TuningSession:
         """Union-group semantics over the original workload query."""
         return self._ensure_applied().answer_group(name)
 
-    def serve(self):
+    def serve(self, maintenance=None):
         """Batched query server bound to this session's executor; the
         server survives `retune()+apply()` (hot swap) and can trigger
-        them itself via `QueryServer.retune_online`."""
+        them itself via `QueryServer.retune_online`.
+
+        Pass `maintenance=` (True, a `repro.maintenance.MaintenanceConfig`
+        or a pre-built `ViewMaintainer`) to serve a STREAMING store: the
+        server then accepts update batches (`submit`) and keeps answers
+        within the configured staleness budget, with measured per-view
+        maintenance costs feeding this session's retune objective."""
         from repro.serve.query_server import QueryServer
 
-        return QueryServer(self._ensure_applied(), session=self)
+        if maintenance is True:
+            from repro.maintenance import MaintenanceConfig
+
+            maintenance = MaintenanceConfig()
+        return QueryServer(self._ensure_applied(), session=self,
+                           maintenance=maintenance)
+
+    # ------------------------------------------------------------------
+    # streaming ingestion (serverless path)
+    # ------------------------------------------------------------------
+    def maintainer(self, cfg=None):
+        """The session's incremental `ViewMaintainer`, created lazily
+        against the applied executor.  Shares `maintenance_costs` so
+        measured costs flow into later retunes."""
+        from repro.maintenance import MaintenanceConfig, ViewMaintainer
+
+        ex = self._ensure_applied()
+        if self._maintainer is None or self._maintainer.executor is not ex:
+            self._maintainer = ViewMaintainer(
+                ex, cfg or MaintenanceConfig(),
+                costs=self.maintenance_costs)
+        return self._maintainer
+
+    def ingest(self, inserts=None, deletes=None):
+        """Apply one triple delta batch incrementally: view extents and
+        TT indexes are maintained in place on device (no refresh, no
+        recompile in steady state) and the session's store advances to
+        the post-delta table.  Returns the `MaintenanceReport`."""
+        from repro.maintenance import Delta
+
+        report = self.maintainer().apply(Delta.of(inserts, deletes))
+        self.store = self.executor.store
+        return report
 
     # ------------------------------------------------------------------
     # static verification

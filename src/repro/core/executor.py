@@ -152,6 +152,16 @@ class QueryExecutor:
         return {"materialized": sorted(fresh), "reused": sorted(reused),
                 "dropped": dropped}
 
+    def note_maintenance(self, store: TripleStore) -> None:
+        """In-place delta applied by `repro.maintenance.ViewMaintainer`:
+        extents/device buffers/TT were updated under the executor, so
+        point at the new store and drop cached answers.  The compiled
+        workload program survives — maintenance keeps operand shapes in
+        their capacity classes precisely so this is NOT a refresh()."""
+        self.store = store
+        self._results = None
+        self.__fns = None
+
     def warmup(self) -> None:
         """Compile every bucket body of the current program and cache
         the workload results, so the next `answer*` call is pure reads —

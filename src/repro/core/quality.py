@@ -57,12 +57,43 @@ def view_maintenance_cost(cq: CQ, stats: Statistics) -> float:
     return cost
 
 
+@dataclass
+class MaintenanceCostModel:
+    """Measured per-view maintenance cost, keyed by the view CQ's
+    canonical key so measurements survive retunes (view ids change,
+    isomorphic views keep their key).
+
+    `measured` holds EWMA'd work units (extent rows touched per update
+    triple) reported by the streaming maintainer; views never maintained
+    yet fall back to the static `view_maintenance_cost` estimate — the
+    paper's a-priori model, progressively replaced by reality."""
+
+    measured: dict = field(default_factory=dict)  # canonical_key -> units
+    alpha: float = 0.3  # EWMA smoothing for observe()
+
+    def observe(self, cq: CQ, units_per_triple: float) -> None:
+        key = cq.canonical_key()
+        prev = self.measured.get(key)
+        self.measured[key] = (units_per_triple if prev is None else
+                              (1 - self.alpha) * prev
+                              + self.alpha * units_per_triple)
+
+    def cost_for(self, cq: CQ, stats: Statistics) -> float:
+        got = self.measured.get(cq.canonical_key())
+        return view_maintenance_cost(cq, stats) if got is None else got
+
+    def __len__(self) -> int:
+        return len(self.measured)
+
+
 def view_infos_for(state: State, stats: Statistics) -> dict[int, cost_mod.RelInfo]:
     return {vid: cost_mod.cq_rel_info(v.cq, stats) for vid, v in state.views.items()}
 
 
 def quality(state: State, stats: Statistics,
-            weights: QualityWeights = QualityWeights()) -> QualityBreakdown:
+            weights: QualityWeights = QualityWeights(),
+            maint_model: MaintenanceCostModel | None = None
+            ) -> QualityBreakdown:
     infos = view_infos_for(state, stats)
     per_query: dict[str, float] = {}
     exec_cost = 0.0
@@ -78,7 +109,9 @@ def quality(state: State, stats: Statistics,
         rows = infos[vid].rows
         per_view_rows[vid] = rows
         space += rows * len(v.cq.head) * BYTES_PER_ID
-        maint += weights.update_rate * view_maintenance_cost(v.cq, stats)
+        unit = (maint_model.cost_for(v.cq, stats) if maint_model is not None
+                else view_maintenance_cost(v.cq, stats))
+        maint += weights.update_rate * unit
 
     total = (weights.w_exec * exec_cost + weights.w_maint * maint
              + weights.w_space * space)

@@ -14,7 +14,8 @@ import random
 import time
 from dataclasses import dataclass, field
 
-from repro.core.quality import QualityBreakdown, QualityWeights, quality
+from repro.core.quality import (MaintenanceCostModel, QualityBreakdown,
+                                QualityWeights, quality)
 from repro.core.state import State
 from repro.core.transitions import is_fully_relaxed, successors
 from repro.rdf.triples import Statistics
@@ -36,6 +37,9 @@ class SearchConfig:
     # warm-start seed: when set, the navigator resumes from this state
     # instead of the initial_state it is handed (TuningSession.retune)
     initial: State | None = None
+    # measured per-view maintenance costs (repro.maintenance); None keeps
+    # the static a-priori estimate for every view
+    maint_model: MaintenanceCostModel | None = None
 
 
 @dataclass
@@ -77,7 +81,7 @@ def search(initial: State, stats: Statistics, cfg: SearchConfig) -> SearchResult
 
 
 def _exhaustive_dfs(initial: State, stats, cfg: SearchConfig, t0: float) -> SearchResult:
-    best, best_q = initial, quality(initial, stats, cfg.weights)
+    best, best_q = initial, quality(initial, stats, cfg.weights, cfg.maint_model)
     seen = {initial.key()}
     stack = [initial]
     explored = 1
@@ -92,7 +96,7 @@ def _exhaustive_dfs(initial: State, stats, cfg: SearchConfig, t0: float) -> Sear
                 continue
             seen.add(k)
             explored += 1
-            q = quality(nxt, stats, cfg.weights)
+            q = quality(nxt, stats, cfg.weights, cfg.maint_model)
             if q.total < best_q.total:
                 best, best_q = nxt, q
                 log.append({"step": explored, "total": q.total, "views": len(nxt.views)})
@@ -103,7 +107,7 @@ def _exhaustive_dfs(initial: State, stats, cfg: SearchConfig, t0: float) -> Sear
 
 
 def _best_first(initial: State, stats, cfg: SearchConfig, t0: float) -> SearchResult:
-    best, best_q = initial, quality(initial, stats, cfg.weights)
+    best, best_q = initial, quality(initial, stats, cfg.weights, cfg.maint_model)
     seen = {initial.key()}
     counter = 0
     heap = [(best_q.total, counter, initial)]
@@ -119,7 +123,7 @@ def _best_first(initial: State, stats, cfg: SearchConfig, t0: float) -> SearchRe
                 continue
             seen.add(k)
             explored += 1
-            q = quality(nxt, stats, cfg.weights)
+            q = quality(nxt, stats, cfg.weights, cfg.maint_model)
             if q.total < best_q.total:
                 best, best_q = nxt, q
                 log.append({"step": explored, "total": q.total, "views": len(nxt.views)})
@@ -131,14 +135,14 @@ def _best_first(initial: State, stats, cfg: SearchConfig, t0: float) -> SearchRe
 
 
 def _greedy(initial: State, stats, cfg: SearchConfig, t0: float) -> SearchResult:
-    cur, cur_q = initial, quality(initial, stats, cfg.weights)
+    cur, cur_q = initial, quality(initial, stats, cfg.weights, cfg.maint_model)
     explored = 1
     log = [{"step": 0, "total": cur_q.total, "views": len(initial.views)}]
     while time.monotonic() - t0 <= cfg.max_seconds and explored < cfg.max_states:
         best_next, best_next_q = None, None
         for nxt in _expand(cur, cfg):
             explored += 1
-            q = quality(nxt, stats, cfg.weights)
+            q = quality(nxt, stats, cfg.weights, cfg.maint_model)
             if best_next_q is None or q.total < best_next_q.total:
                 best_next, best_next_q = nxt, q
             if explored >= cfg.max_states:
@@ -151,7 +155,7 @@ def _greedy(initial: State, stats, cfg: SearchConfig, t0: float) -> SearchResult
 
 
 def _beam(initial: State, stats, cfg: SearchConfig, t0: float) -> SearchResult:
-    best, best_q = initial, quality(initial, stats, cfg.weights)
+    best, best_q = initial, quality(initial, stats, cfg.weights, cfg.maint_model)
     frontier = [(best_q, initial)]
     seen = {initial.key()}
     explored = 1
@@ -167,7 +171,7 @@ def _beam(initial: State, stats, cfg: SearchConfig, t0: float) -> SearchResult:
                     continue
                 seen.add(k)
                 explored += 1
-                q = quality(nxt, stats, cfg.weights)
+                q = quality(nxt, stats, cfg.weights, cfg.maint_model)
                 candidates.append((q, nxt))
                 if q.total < best_q.total:
                     best, best_q = nxt, q
@@ -184,7 +188,7 @@ def _beam(initial: State, stats, cfg: SearchConfig, t0: float) -> SearchResult:
 
 def _anneal(initial: State, stats, cfg: SearchConfig, t0: float) -> SearchResult:
     rng = random.Random(cfg.seed)
-    cur, cur_q = initial, quality(initial, stats, cfg.weights)
+    cur, cur_q = initial, quality(initial, stats, cfg.weights, cfg.maint_model)
     best, best_q = cur, cur_q
     temp = cfg.anneal_t0 * max(cur_q.total, 1.0)
     explored = 1
@@ -197,7 +201,7 @@ def _anneal(initial: State, stats, cfg: SearchConfig, t0: float) -> SearchResult
             break
         nxt = rng.choice(succ)
         explored += 1
-        q = quality(nxt, stats, cfg.weights)
+        q = quality(nxt, stats, cfg.weights, cfg.maint_model)
         delta = q.total - cur_q.total
         if delta <= 0 or rng.random() < math.exp(-delta / max(temp, 1e-9)):
             cur, cur_q = nxt, q

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from repro.kernels.filter_compact import filter_mask_pallas
 from repro.kernels.flash_attn import flash_attention_pallas
 from repro.kernels.join_count import join_count_pallas
+from repro.kernels.scatter_append import scatter_append_pallas
 
 
 def _interpret() -> bool:
@@ -64,6 +65,32 @@ def filter_mask(rows: jax.Array, conds: tuple[tuple[int, int], ...]
                 f"conds[{k}] column {col} out of range for rows of "
                 f"width {width}")
     return filter_mask_pallas(rows, conds, interpret=_interpret())
+
+
+def scatter_append(buf: jax.Array, n, rows: jax.Array, k) -> jax.Array:
+    """Append rows[:k] at position n of the (cap, W) buffer without
+    changing its shape — the streaming-maintenance extent append.
+
+    n and k may be host ints (checked against cap here) or int32 scalars;
+    either way they travel to the kernel as data, so one compilation
+    covers every batch of the same (cap, dcap, W) shape class."""
+    _check(buf, "buf", 2, jnp.int32)
+    _check(rows, "rows", 2, jnp.int32)
+    if buf.shape[1] != rows.shape[1]:
+        raise ValueError(
+            f"buf width {buf.shape[1]} != rows width {rows.shape[1]}")
+    if isinstance(n, int) and isinstance(k, int):
+        if n < 0 or k < 0:
+            raise ValueError(f"n and k must be non-negative, got {n}, {k}")
+        if n + k > buf.shape[0]:
+            raise ValueError(
+                f"append overflows capacity: n={n} + k={k} > cap="
+                f"{buf.shape[0]} — grow the capacity class first")
+        if k > rows.shape[0]:
+            raise ValueError(
+                f"k={k} exceeds delta buffer capacity {rows.shape[0]}")
+    nk = jnp.asarray([[n, k]], dtype=jnp.int32)
+    return scatter_append_pallas(buf, rows, nk, interpret=_interpret())
 
 
 def flash_attention(q, k, v, window: int = 0):

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: scatter-append into a padded relation buffer.
+
+Streaming maintenance appends k delta rows to a view extent living in a
+(cap, W) capacity-class buffer with n valid rows.  The append must not
+change the buffer shape (shape change == recompile of every consumer
+bucket), so it is an in-place-style scatter: row r of the output is
+
+    buf[r]          if r < n or r >= n + k        (untouched / scrubbed tail)
+    delta[r - n]    if n <= r < n + k             (appended)
+
+n and k are *data* (they change every batch) — they arrive as a (1, 2)
+int32 operand so the compiled kernel is reused across batches.  The
+gather delta[r - n] is expressed without dynamic indexing: a (BR, DCAP)
+one-hot selection mask contracted against the delta buffer column by
+column — pure VPU integer ops, no MXU, no scatter primitive.
+
+  grid = (cap // BR,)
+  buf tile (BR, W) VMEM + full delta (DCAP, W) VMEM -> out tile (BR, W)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BR = 512
+
+
+def _make_kernel(br: int, dcap: int, w: int):
+    def kernel(nk_ref, buf_ref, rows_ref, out_ref):
+        i = pl.program_id(0)
+        n = nk_ref[0, 0]
+        k = nk_ref[0, 1]
+        base = i * br
+        # slot j of the delta buffer lands at absolute row n + j
+        pos = base + jax.lax.broadcasted_iota(jnp.int32, (br, 1), 0)  # (BR,1)
+        slot = pos - n                                                # (BR,1)
+        d = jax.lax.broadcasted_iota(jnp.int32, (br, dcap), 1)
+        sel = ((d == slot) & (d < k)).astype(jnp.int32)               # (BR,DCAP)
+        cols = []
+        for c in range(w):
+            vals = rows_ref[:, c].reshape(1, dcap)                    # (1,DCAP)
+            cols.append(jnp.sum(sel * vals, axis=1, keepdims=True))   # (BR,1)
+        appended = jnp.concatenate(cols, axis=1)                      # (BR,W)
+        take = (slot >= 0) & (slot < k)                               # (BR,1)
+        out_ref[...] = jnp.where(take, appended, buf_ref[...])
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("br", "interpret"))
+def scatter_append_pallas(buf: jax.Array, rows: jax.Array, nk: jax.Array,
+                          br: int = DEFAULT_BR, interpret: bool = True
+                          ) -> jax.Array:
+    """Append rows[:k] at position n of buf (n, k = nk[0, 0], nk[0, 1]).
+
+    buf:  (cap, W) int32 capacity-class buffer, -1-scrubbed past n
+    rows: (dcap, W) int32 delta buffer; rows at index >= k are ignored
+    nk:   (1, 2) int32 — dynamic (n, k), NOT baked into the compilation
+    """
+    cap, w = buf.shape
+    dcap = rows.shape[0]
+    br = min(br, cap)
+    capp = -(-cap // br) * br
+    buf_p = buf if capp == cap else \
+        jnp.full((capp, w), -1, dtype=jnp.int32).at[:cap].set(buf)
+    out = pl.pallas_call(
+        _make_kernel(br, dcap, w),
+        grid=(capp // br,),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+            pl.BlockSpec((br, w), lambda i: (i, 0)),
+            pl.BlockSpec((dcap, w), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((capp, w), jnp.int32),
+        interpret=interpret,
+    )(nk, buf_p, rows)
+    return out[:cap]

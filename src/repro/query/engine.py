@@ -177,7 +177,10 @@ def scan_pattern(index_data: jax.Array, prefix: tuple[tuple[int, int], ...],
     n_tt = index_data.shape[0]
     if len(prefix) == 0:
         lo = jnp.int32(0)
-        hi = jnp.int32(n_tt)
+        # padded TT buffers (capacity-class maintenance uploads, shards)
+        # end in SENTINEL_HI rows, which sort last in every index order —
+        # count real rows so padding doesn't inflate the overflow check
+        hi = jnp.sum(index_data[:, 0] != SENTINEL_HI).astype(jnp.int32)
     elif len(prefix) == 1:
         col = index_data[:, prefix[0][0]]
         key = jnp.asarray(prefix[0][1], jnp.int32)
@@ -389,3 +392,23 @@ def build_executor(plan: Plan, stats, view_infos: dict[int, "cost_mod.RelInfo"],
 
 def tt_device_indexes(store) -> dict[str, jax.Array]:
     return {name: jnp.asarray(store.index(name)) for name in INDEX_NAMES}
+
+
+def tt_device_indexes_padded(store, cap: int) -> dict[str, jax.Array]:
+    """TT indexes padded with SENTINEL_HI rows to a fixed capacity class.
+
+    Streaming maintenance re-uploads TT' every batch; padding to a class
+    keeps every scan operand shape constant while the store grows, so
+    appends never recompile the workload program.  Sentinel rows sort
+    after every real id in all six orders, preserving binary-search
+    semantics, and `scan_pattern` masks them out."""
+    if cap < len(store):
+        raise ValueError(
+            f"tt capacity class {cap} < store size {len(store)}")
+    out = {}
+    for name in INDEX_NAMES:
+        data = store.index(name)
+        buf = np.full((cap, 3), np.iinfo(np.int32).max, dtype=np.int32)
+        buf[: len(data)] = data
+        out[name] = jnp.asarray(buf)
+    return out

@@ -15,6 +15,14 @@ A server bound to a `repro.api.TuningSession` can retune ONLINE: the
 session's `apply()` hot-swaps the compiled workload program on the same
 executor object this server holds, so `retune_online()` evolves the
 workload behind the batched endpoint without a server restart.
+
+With `maintenance=` configured the server also ingests streaming triple
+deltas (`submit`) under a staleness budget: pending updates are applied
+by the incremental `ViewMaintainer` (repro.maintenance) between batches
+whenever the backlog exceeds `staleness_budget` pending triples, so an
+answered batch is never more than the budget stale.  The maintainer's
+drift detector can trigger an automatic retune (`auto_retune`), with
+measured per-view maintenance costs feeding the retune's objective.
 """
 from __future__ import annotations
 
@@ -41,16 +49,49 @@ class ServeStats:
     bucket_cache_misses: int = 0
     bucket_compile_seconds: float = 0.0
     compile_cache_entries: int = 0
+    # streaming maintenance (repro.maintenance)
+    updates_submitted: int = 0     # triples ever submitted
+    updates_applied: int = 0       # effective triples maintained
+    refreshes: int = 0             # maintenance passes run
+    backlog_batches: int = 0       # pending update batches right now
+    backlog_triples: int = 0       # pending triples right now (lag)
+    max_staleness_served: int = 0  # worst pending-triple count at answer
+    maintenance_seconds: float = 0.0
+    drift_retunes: int = 0
 
     def as_dict(self) -> dict:
         return dict(self.__dict__)
 
 
 class QueryServer:
-    def __init__(self, executor: QueryExecutor, session=None):
+    def __init__(self, executor: QueryExecutor, session=None,
+                 maintenance=None):
+        """`maintenance`: None (static store), a
+        `repro.maintenance.MaintenanceConfig`, or a pre-built
+        `ViewMaintainer` bound to this executor."""
         self.executor = executor
         self.session = session
         self.stats = ServeStats()
+        self.maintainer = None
+        self.stream = None
+        if maintenance is not None:
+            from repro.maintenance import (MaintenanceConfig, UpdateStream,
+                                           ViewMaintainer)
+
+            if isinstance(maintenance, ViewMaintainer):
+                self.maintainer = maintenance
+                if self.session is not None:
+                    # session adopts the pre-built maintainer's measured
+                    # costs so they flow into its retune objective
+                    self.session.maintenance_costs = self.maintainer.costs
+            else:
+                cfg = maintenance if isinstance(maintenance,
+                                                MaintenanceConfig) \
+                    else MaintenanceConfig()
+                costs = (self.session.maintenance_costs
+                         if self.session is not None else None)
+                self.maintainer = ViewMaintainer(executor, cfg, costs=costs)
+            self.stream = UpdateStream()
 
     @classmethod
     def from_tuned(cls, store, workload, schema=None, type_id=None, cfg=None):
@@ -93,8 +134,67 @@ class QueryServer:
             self.session.add_query(q)
         retune = self.session.retune()
         apply_ = self.session.apply()  # hot swap: self.executor stays valid
+        if self.maintainer is not None:
+            self.maintainer.rebind(self.executor)
         self.stats.retunes += 1
         return {"retune": retune, "apply": apply_}
+
+    # ------------------------------------------------------------------
+    # streaming updates (repro.maintenance)
+    # ------------------------------------------------------------------
+    def submit(self, inserts=None, deletes=None) -> None:
+        """Enqueue one update batch.  Cheap: the device work happens at
+        the next answer under the staleness budget (or at `flush`)."""
+        if self.stream is None:
+            raise RuntimeError(
+                "server has no update stream; construct with maintenance=")
+        from repro.maintenance import Delta
+
+        self.stream.push(Delta.of(inserts, deletes))
+        self.stats.updates_submitted = self.stream.total_pushed
+
+    def flush(self) -> list:
+        """Apply the entire backlog now, regardless of budget."""
+        return self._refresh(budget=0)
+
+    def _refresh(self, budget: int | None = None) -> list:
+        """Apply pending deltas while the backlog exceeds the budget;
+        returns the MaintenanceReports of the applied passes."""
+        if self.stream is None or self.maintainer is None:
+            return []
+        if budget is None:
+            budget = self.maintainer.cfg.staleness_budget
+        reports = []
+        while self.stream.pending_triples > budget:
+            delta = self.stream.coalesce() if budget == 0 \
+                else self.stream.pop()
+            if delta is None:
+                break
+            report = self.maintainer.apply(delta)
+            reports.append(report)
+            self.stats.refreshes += 1
+            self.stats.updates_applied += (report.eff_inserts
+                                           + report.eff_deletes)
+            self.stats.maintenance_seconds += report.seconds
+            if self.session is not None:
+                self.session.store = self.executor.store
+            if (report.drift is not None and report.drift.triggered
+                    and self.maintainer.cfg.auto_retune
+                    and self.session is not None):
+                self._drift_retune()
+        self.stats.backlog_batches = self.stream.pending_batches
+        self.stats.backlog_triples = self.stream.pending_triples
+        return reports
+
+    def _drift_retune(self) -> None:
+        """Drift-triggered retune: re-search with measured maintenance
+        costs and the store's fresh statistics, hot-swap the program,
+        and rebind the maintainer to the new view set."""
+        self.session.retune()
+        self.session.apply()  # hot swap on the same executor object
+        self.maintainer.rebind(self.executor)
+        self.stats.retunes += 1
+        self.stats.drift_retunes += 1
 
     # ------------------------------------------------------------------
     def answer_batch(self, names: list[str]) -> list[set[tuple[int, ...]] | None]:
@@ -102,8 +202,15 @@ class QueryServer:
 
         Unknown names yield None instead of failing the batch.  The
         first batch triggers the single fused workload evaluation; later
-        batches are served from the cached results.
+        batches are served from the cached results.  With streaming
+        maintenance configured, pending updates beyond the staleness
+        budget are applied first — the answers of a batch are never more
+        than `staleness_budget` pending triples stale.
         """
+        self._refresh()
+        if self.stream is not None:
+            self.stats.max_staleness_served = max(
+                self.stats.max_staleness_served, self.stream.pending_triples)
         self.executor.answer_workload()  # at most one device call
         out: list[set[tuple[int, ...]] | None] = []
         for name in names:
@@ -131,6 +238,10 @@ class QueryServer:
             # keep the session on the serving store: later retunes search
             # with its statistics, and save() persists its triple table
             self.session.store = self.executor.store
+        if self.maintainer is not None:
+            # refresh() rebuilt device state from scratch (unpadded TT,
+            # exact-class extents): re-establish maintenance invariants
+            self.maintainer.rebind(self.executor)
 
     def _sync_telemetry(self) -> None:
         t = self.executor.telemetry()
@@ -145,3 +256,6 @@ class QueryServer:
         self.stats.bucket_cache_misses = t["bucket_compiles"]
         self.stats.bucket_compile_seconds = t["bucket_compile_seconds"]
         self.stats.compile_cache_entries = t["compile_cache"]["entries"]
+        if self.stream is not None:
+            self.stats.backlog_batches = self.stream.pending_batches
+            self.stats.backlog_triples = self.stream.pending_triples

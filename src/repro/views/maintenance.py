@@ -1,6 +1,24 @@
-"""Incremental view maintenance (single-triple inserts).
+"""Incremental view maintenance reference oracle.
 
-delta(V, t) = ∪_i  eval( V with atom_i unified against t )  over TT ∪ {t}
+Single-triple inserts (the original oracle, kept verbatim for the
+transition suite):
+
+    delta(V, t) = ∪_i  eval( V with atom_i unified against t )  over TT ∪ {t}
+
+Batched deltas (`apply_delta`) extend it to insert+delete streams and
+serve as the correctness oracle for the device subsystem in
+`repro.maintenance`:
+
+  * effective deletes  Δ⁻ₑ = (TT ∩ Δ⁻) \\ Δ⁺   (insert wins on a tie)
+  * effective inserts  Δ⁺ₑ = Δ⁺ \\ TT
+  * TT' = (TT \\ Δ⁻) ∪ Δ⁺
+  * deletions: views here are full projections (head == all body vars),
+    so every extent row IS a total variable assignment and has exactly
+    one derivation — a row dies iff any of its instantiated atom
+    triples is in Δ⁻ₑ.  No re-derivation or counting needed.
+  * insertions: per-atom unification against the batch, rest evaluated
+    over TT' (covers multi-delta derivations: every atom of a new
+    derivation is either in TT' already or arrives in the same batch).
 
 The quality function only needs the *cost estimate*
 (core/quality.view_maintenance_cost); this module implements the actual
@@ -12,7 +30,7 @@ import numpy as np
 
 from repro.core.queries import CQ, Atom, Const, Term, Var
 from repro.query import ref_engine as R
-from repro.rdf.triples import TripleStore
+from repro.rdf.triples import TripleStore, triples_in
 
 
 def _unify(atom: Atom, triple: tuple[int, int, int]) -> dict[Var, Const] | None:
@@ -74,3 +92,97 @@ def maintain(view_cq: CQ, old_extent: np.ndarray, store: TripleStore,
         np.concatenate([old_extent.reshape(-1, len(view_cq.head)), delta]), axis=0
     )
     return merged, new_store, int(len(merged) - len(old_extent))
+
+
+# ----------------------------------------------------------------------
+# batched insert/delete deltas
+# ----------------------------------------------------------------------
+def is_full_projection(view_cq: CQ) -> bool:
+    """Head covers every body variable (the shape the wizard's views
+    always have) — the precondition for membership-based deletion."""
+    return tuple(view_cq.head) == view_cq.all_vars()
+
+
+def instantiate_atoms(view_cq: CQ, extent: np.ndarray) -> list[np.ndarray]:
+    """Per atom, the (n, 3) concrete triples each extent row derives it
+    from.  Only valid for full-projection views (total assignments)."""
+    extent = np.asarray(extent, np.int32).reshape(-1, len(view_cq.head))
+    col = {h.name: k for k, h in enumerate(view_cq.head)}
+    out = []
+    n = len(extent)
+    for atom in view_cq.atoms:
+        cols = []
+        for t in atom.terms():
+            if isinstance(t, Const):
+                cols.append(np.full(n, t.id, np.int32))
+            else:
+                cols.append(extent[:, col[t.name]])
+        out.append(np.stack(cols, axis=1) if n else np.zeros((0, 3), np.int32))
+    return out
+
+
+def retract_mask(view_cq: CQ, extent: np.ndarray,
+                 eff_deletes: np.ndarray) -> np.ndarray:
+    """Boolean mask of extent rows that survive the effective deletes."""
+    extent = np.asarray(extent, np.int32).reshape(-1, len(view_cq.head))
+    keep = np.ones(len(extent), dtype=bool)
+    if len(extent) == 0 or len(eff_deletes) == 0:
+        return keep
+    for inst in instantiate_atoms(view_cq, extent):
+        keep &= ~triples_in(inst, eff_deletes)
+    return keep
+
+
+def effective_delta(store: TripleStore, inserts: np.ndarray | None,
+                    deletes: np.ndarray | None
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """(effective_inserts, effective_deletes) vs the current store:
+    duplicates of existing triples and deletes of absent triples are
+    dropped; an insert and delete of the same triple in one batch nets
+    to the insert."""
+    ins = (np.zeros((0, 3), np.int32) if inserts is None
+           else np.unique(np.asarray(inserts, np.int32).reshape(-1, 3), axis=0))
+    dels = (np.zeros((0, 3), np.int32) if deletes is None
+            else np.unique(np.asarray(deletes, np.int32).reshape(-1, 3), axis=0))
+    if len(dels):
+        dels = dels[store.contains(dels)]
+        if len(ins):
+            dels = dels[~triples_in(dels, ins)]
+    if len(ins):
+        ins = ins[~store.contains(ins)]
+    return ins, dels
+
+
+def apply_delta(view_cq: CQ, old_extent: np.ndarray, store: TripleStore,
+                inserts: np.ndarray | None = None,
+                deletes: np.ndarray | None = None
+                ) -> tuple[np.ndarray, TripleStore]:
+    """Batched-delta oracle: maintain `old_extent` (rows in head order)
+    through one insert/delete batch.  Returns (new_extent, new_store).
+
+    Views that are not full projections fall back to re-evaluation for
+    the delete side (no way to attribute derivations from the extent
+    alone); the wizard never produces such views."""
+    width = len(view_cq.head)
+    old_extent = np.asarray(old_extent, np.int32).reshape(-1, width)
+    eff_ins, eff_del = effective_delta(store, inserts, deletes)
+    new_store = store.apply_delta(inserts, deletes)
+
+    if len(eff_del):
+        if is_full_projection(view_cq):
+            extent = old_extent[retract_mask(view_cq, old_extent, eff_del)]
+        else:
+            extent = R.evaluate_cq(view_cq, new_store).rows.reshape(-1, width)
+            extent = np.unique(np.asarray(extent, np.int32), axis=0)
+            return extent, new_store
+    else:
+        extent = old_extent
+
+    if len(eff_ins):
+        parts = [extent]
+        for t in eff_ins:
+            parts.append(delta_rows(view_cq, new_store, tuple(int(v) for v in t)))
+        extent = np.unique(np.concatenate(parts), axis=0) if len(parts) > 1 else extent
+    elif len(eff_del):
+        extent = np.unique(extent, axis=0) if len(extent) else extent
+    return extent, new_store

@@ -1,0 +1,157 @@
+"""Fault-tolerant serving under injected failures (repro.serve.chaos).
+
+Scenario: a tuned LUBM session serves a streaming store (small update
+batches between query batches) while the chaos harness injects one
+fault class at a time at a fixed batch index — device-call failure,
+capacity-overflow storm, compile failure on a fresh program, a failed
+maintenance pass, a corrupted extent, and a crashed online retune.
+
+Per fault class the stream measures what the degradation ladder
+actually delivered: availability (batches answered vs
+`ServiceUnavailable`), the fraction of batches served degraded/stale,
+and the recovery time — batches from fault injection until the health
+state machine reads HEALTHY again.  Every served batch is checked
+against the host reference engine unless it was explicitly flagged
+degraded/stale, so the numbers cannot hide silently wrong answers.
+Lands in BENCH_fault.json with the acceptance assertions applied
+(aggregate availability >= 99%, every class recovers to HEALTHY).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.bench_common import emit, quick_mode, write_bench_json
+from repro.api import (MaintenanceConfig, QualityWeights, SearchConfig,
+                       TuningSession, WizardConfig)
+from repro.errors import ServiceUnavailable
+from repro.rdf.generator import generate, lubm_workload
+from repro.serve.chaos import FaultInjector, InjectedFault
+
+INJECT_AT = 3  # batch index (0-based) at which each fault class fires
+
+
+def _cfg() -> WizardConfig:
+    return WizardConfig(search=SearchConfig(
+        strategy="greedy", max_states=400,
+        weights=QualityWeights(w_exec=1.0, w_maint=1.0, w_space=1.0)))
+
+
+def _update(rng, store, size=8):
+    tt = store.triples
+    subjects = np.unique(tt[:, 0])
+    preds = np.unique(tt[:, 1])
+    objects = np.unique(tt[:, 2])
+    return np.stack([rng.choice(subjects, size), rng.choice(preds, size),
+                     rng.choice(objects, size)], axis=1).astype(np.int32)
+
+
+def _inject(klass: str, srv, chaos: FaultInjector) -> None:
+    """Arm one fault class.  Durations are sized so the fault outlives
+    the in-batch retry (max_attempts=2) for one batch, then clears —
+    recovery is the ladder's job, not the schedule's."""
+    if klass == "device_call":
+        chaos.arm("device_call", count=2)
+    elif klass == "capacity_overflow":
+        chaos.arm("capacity_overflow", count=2)
+    elif klass == "compile":
+        srv.invalidate()  # fresh program: the next run must compile
+        chaos.arm("compile", count=2)
+    elif klass == "maintenance_apply":
+        chaos.arm("maintenance_apply", count=1)
+    elif klass == "extent_corrupt":
+        chaos.corrupt_extent(srv.executor)
+    elif klass == "retune_crash":
+        chaos.arm("retune", count=1)
+        try:
+            srv.retune_online()  # rolled back; previous program serves
+        except InjectedFault:
+            pass  # expected: the edit rolls back, serving continues
+    else:
+        raise ValueError(f"unknown fault class {klass!r}")
+
+
+def _stream(session, rng, names, klass: str, n_batches: int,
+            metrics: dict, lines: list[str]) -> tuple[int, int]:
+    """Serve one stream with `klass` injected at INJECT_AT; returns
+    (served, total) batch counts."""
+    chaos = FaultInjector()
+    srv = session.serve(maintenance=MaintenanceConfig(auto_retune=False),
+                        chaos=chaos, policy=None)
+    served = unavailable = degraded_batches = 0
+    recovered_at = None
+    for i in range(n_batches):
+        if i == INJECT_AT:
+            _inject(klass, srv, chaos)
+        srv.submit(inserts=_update(rng, srv.executor.store))
+        name = names[i % len(names)]
+        try:
+            out = srv.answer_batch([name])
+        except ServiceUnavailable:
+            unavailable += 1
+            continue
+        served += 1
+        last = srv.stats.last_batch
+        if last["degraded"] or last["stale"]:
+            degraded_batches += 1
+        else:
+            # an unflagged answer must equal the reference engine
+            want = srv.executor.answer_group_direct(name)
+            assert out[0] == want, \
+                f"silently wrong answer under {klass} at batch {i}"
+        if i >= INJECT_AT and recovered_at is None \
+                and srv.stats.health == "HEALTHY":
+            recovered_at = i
+    availability = 100.0 * served / n_batches
+    recovery = (recovered_at - INJECT_AT) if recovered_at is not None \
+        else n_batches
+    degraded_frac = degraded_batches / n_batches
+    metrics[f"{klass}_availability_pct"] = availability
+    metrics[f"{klass}_degraded_frac"] = degraded_frac
+    metrics[f"{klass}_recovery_batches"] = recovery
+    metrics[f"{klass}_injected"] = chaos.injected
+    metrics[f"{klass}_final_health"] = srv.stats.health
+    lines.append(emit(f"fault.{klass}", 0.0,
+                      f"avail={availability:.1f}%;"
+                      f"degraded={degraded_frac:.2f};"
+                      f"recovery={recovery}b"))
+    assert srv.stats.health == "HEALTHY", \
+        f"{klass}: server must return to HEALTHY (got {srv.stats.health})"
+    return served, n_batches
+
+
+def main(lines: list[str]) -> None:
+    quick = quick_mode()
+    rng = np.random.default_rng(0)
+    uni = generate(n_universities=1 if quick else 10, seed=0)
+    wl = lubm_workload(uni.dictionary)
+    session = TuningSession(uni.store, wl, schema=uni.schema,
+                            type_id=uni.type_id, cfg=_cfg())
+    session.retune()
+    session.apply()
+    names = [q.name for q in wl]
+    n_batches = 10 if quick else 24
+
+    metrics: dict = {"store_triples": len(session.executor.store),
+                     "queries": len(wl), "quick": int(quick),
+                     "batches_per_class": n_batches}
+    classes = ["device_call", "capacity_overflow", "compile",
+               "maintenance_apply", "extent_corrupt", "retune_crash"]
+    total_served = total_batches = 0
+    for klass in classes:
+        served, total = _stream(session, rng, names, klass, n_batches,
+                                metrics, lines)
+        total_served += served
+        total_batches += total
+
+    availability = 100.0 * total_served / total_batches
+    metrics["availability_pct"] = availability
+    lines.append(emit("fault.aggregate", 0.0,
+                      f"avail={availability:.2f}%;classes={len(classes)}"))
+    assert availability >= 99.0, (
+        f"degradation ladder must keep availability >= 99% under every "
+        f"fault class (got {availability:.2f}%)")
+    write_bench_json("fault", metrics)
+
+
+if __name__ == "__main__":
+    main(["name,us_per_call,derived"])

@@ -6,6 +6,7 @@
   retune          TuningSession: cold tune() vs warm retune()+delta apply()
   reformulation   §3 Workload Processor: union sizes + completeness gain
   maintenance     quality m-term: incremental vs recompute
+  fault           degradation ladder: availability/recovery per fault class
   kernels         Pallas join probe vs jnp oracle (+TPU derived terms)
   lm_step         LM substrate smoke-step timings
 
@@ -20,9 +21,10 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (bench_compile_scale, bench_kernels, bench_lm_step,
-                            bench_maintenance, bench_query_eval,
-                            bench_reformulation, bench_retune, bench_search)
+    from benchmarks import (bench_compile_scale, bench_fault, bench_kernels,
+                            bench_lm_step, bench_maintenance,
+                            bench_query_eval, bench_reformulation,
+                            bench_retune, bench_search)
 
     args = sys.argv[1:]
     if "--quick" in args:  # CI smoke: small datasets, few iterations
@@ -36,6 +38,7 @@ def main() -> None:
         "retune": bench_retune.main,
         "reformulation": bench_reformulation.main,
         "maintenance": bench_maintenance.main,
+        "fault": bench_fault.main,
         "kernels": bench_kernels.main,
         "lm_step": bench_lm_step.main,
     }

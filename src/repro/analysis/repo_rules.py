@@ -12,6 +12,15 @@ the source says, catching patterns that only bite later:
                            — tracing would crash (or worse, cache on
                            object identity) the first time the default
                            is used
+  rules/swallowed-exception  in the serving/maintenance/api packages, a
+                           broad handler (`except:` / `except Exception`)
+                           whose body neither re-raises nor calls
+                           anything — the fault-tolerant serving core
+                           must degrade, roll back, or at least record
+                           a fault; silently eating one hides exactly
+                           the failures the degradation ladder exists
+                           to surface (opt-out: ``# lint: allow-swallow``
+                           on the except line)
 
 Scope: the pipeline packages (`core`, `query`, `api`, `views`, `rdf`,
 `serve`, `kernels`, `checkpoint`, `analysis`, the top-level modules).
@@ -31,6 +40,9 @@ EXCLUDED_DIRS = frozenset(
     {"models", "launch", "train", "configs", "distributed", "data",
      "tests", "__pycache__"})
 ALLOW_MARKER = "lint: allow-assert"
+SWALLOW_MARKER = "lint: allow-swallow"
+# packages where a silently-swallowed exception defeats fault tolerance
+SWALLOW_SCOPE = frozenset({"serve", "maintenance", "api"})
 
 _MUTABLE_CALLS = ("list", "dict", "set", "bytearray")
 
@@ -105,6 +117,31 @@ def _static_params(call: ast.Call, fn: ast.FunctionDef | None
     return names
 
 
+def _catches_broad(handler: ast.ExceptHandler) -> bool:
+    """`except:`, `except Exception`, `except BaseException` (possibly
+    inside a tuple)."""
+    if handler.type is None:
+        return True
+    for node in ast.walk(handler.type):
+        if isinstance(node, ast.Name) \
+                and node.id in ("Exception", "BaseException"):
+            return True
+        if isinstance(node, ast.Attribute) \
+                and node.attr in ("Exception", "BaseException"):
+            return True
+    return False
+
+
+def _swallows(handler: ast.ExceptHandler) -> bool:
+    """True when the handler body neither re-raises nor calls anything
+    (no rollback, no fault log, no fallback) — the failure vanishes."""
+    for stmt in handler.body:
+        for node in ast.walk(stmt):
+            if isinstance(node, (ast.Raise, ast.Call)):
+                return False
+    return True
+
+
 def check_source(source: str, path: str) -> list[Finding]:
     """Run every rule over one module's source."""
     try:
@@ -114,6 +151,7 @@ def check_source(source: str, path: str) -> list[Finding]:
                    f"{path}:{e.lineno or 0}")]
     lines = source.splitlines()
     out: list[Finding] = []
+    swallow_scope = path.replace(os.sep, "/").split("/")[0] in SWALLOW_SCOPE
 
     functions: dict[str, ast.FunctionDef | ast.AsyncFunctionDef] = {}
     for node in ast.walk(tree):
@@ -148,6 +186,19 @@ def check_source(source: str, path: str) -> list[Finding]:
                     if statics:
                         out.extend(_check_static_defaults(
                             node, statics, path))
+        # rule: swallowed exception ----------------------------------------
+        if isinstance(node, ast.ExceptHandler) and swallow_scope:
+            line = lines[node.lineno - 1] if node.lineno <= len(lines) else ""
+            if (SWALLOW_MARKER not in line and _catches_broad(node)
+                    and _swallows(node)):
+                out.append(_f(
+                    "rules/swallowed-exception",
+                    "broad except handler silently swallows the failure — "
+                    "serving/maintenance code must re-raise, roll back, "
+                    "degrade, or record a fault (repro.serve telemetry); "
+                    "opt out with `# lint: allow-swallow` if the silence "
+                    "is the contract",
+                    f"{path}:{node.lineno}"))
         # rule: jit(f, static_...) call form -------------------------------
         if isinstance(node, ast.Call):
             target = None

@@ -72,6 +72,24 @@ class RetuneReport:
 
 
 @dataclass
+class SessionSnapshot:
+    """Every binding a retune/apply cycle mutates, captured so an
+    online edit can be rolled back atomically (`TuningSession.restore`).
+    The executor is snapshotted alongside because `apply()` hot-swaps
+    it in place."""
+
+    workload: dict[str, CQ]
+    groups: dict[str, list[str]]
+    best: State | None
+    best_quality: QualityBreakdown | None
+    applied: State | None
+    type_id: int | None
+    store: TripleStore
+    executor: QueryExecutor | None
+    executor_snap: object | None    # core.executor.ExecutorSnapshot
+
+
+@dataclass
 class ApplyReport:
     """One view swap: which extents were touched."""
 
@@ -112,6 +130,9 @@ class TuningSession:
         # MEASURED costs instead of the static estimate.
         self.maintenance_costs = MaintenanceCostModel()
         self._maintainer = None
+        # chaos injector (duck-typed: .fire(site)); set by a QueryServer
+        # constructed with chaos= so retune/apply become fault boundaries
+        self.fault_hook = None
 
     # ------------------------------------------------------------------
     # workload evolution
@@ -186,6 +207,8 @@ class TuningSession:
         """
         if not self._workload:
             raise ValueError("cannot retune an empty workload")
+        if self.fault_hook is not None:
+            self.fault_hook.fire("retune")
         members, groups = self._members()
         added: list[str] = []
         removed: list[str] = []
@@ -236,10 +259,13 @@ class TuningSession:
         """
         if self._best is None:
             raise RuntimeError("retune() before apply()")
+        if self.fault_hook is not None:
+            self.fault_hook.fire("apply")
         if self.executor is None:
             self.executor = QueryExecutor(self.store, self._best,
                                           self._groups,
-                                          use_pallas=self.cfg.use_pallas)
+                                          use_pallas=self.cfg.use_pallas,
+                                          fault_hook=self.fault_hook)
             if warm:
                 self.executor.warmup()
             report = ApplyReport(materialized=sorted(self._best.views),
@@ -261,6 +287,39 @@ class TuningSession:
         return self._best is not None and self._best is not self._applied
 
     # ------------------------------------------------------------------
+    # transactional edits
+    # ------------------------------------------------------------------
+    def snapshot(self) -> SessionSnapshot:
+        """Capture the session (and its live executor) before an online
+        edit, so a failed add/remove + retune + apply can be rolled back
+        as one transaction (`restore`)."""
+        return SessionSnapshot(
+            workload=dict(self._workload),
+            groups={k: list(v) for k, v in self._groups.items()},
+            best=self._best, best_quality=self._best_quality,
+            applied=self._applied, type_id=self._type_id, store=self.store,
+            executor=self.executor,
+            executor_snap=(self.executor.snapshot()
+                           if self.executor is not None else None))
+
+    def restore(self, snap: SessionSnapshot) -> None:
+        """Roll the session back to a snapshot.  The executor OBJECT is
+        restored in place (servers hold it by reference), so after a
+        crashed retune/apply the previous compiled program keeps
+        serving."""
+        self._workload = dict(snap.workload)
+        self._groups = {k: list(v) for k, v in snap.groups.items()}
+        self._best, self._best_quality = snap.best, snap.best_quality
+        self._applied = snap.applied
+        self._type_id = snap.type_id
+        self.store = snap.store
+        if snap.executor is None:
+            self.executor = None
+        else:
+            self.executor = snap.executor
+            self.executor.restore(snap.executor_snap)
+
+    # ------------------------------------------------------------------
     # answering / serving
     # ------------------------------------------------------------------
     def _ensure_applied(self) -> QueryExecutor:
@@ -274,7 +333,7 @@ class TuningSession:
         """Union-group semantics over the original workload query."""
         return self._ensure_applied().answer_group(name)
 
-    def serve(self, maintenance=None):
+    def serve(self, maintenance=None, chaos=None, policy=None):
         """Batched query server bound to this session's executor; the
         server survives `retune()+apply()` (hot swap) and can trigger
         them itself via `QueryServer.retune_online`.
@@ -283,7 +342,11 @@ class TuningSession:
         or a pre-built `ViewMaintainer`) to serve a STREAMING store: the
         server then accepts update batches (`submit`) and keeps answers
         within the configured staleness budget, with measured per-view
-        maintenance costs feeding this session's retune objective."""
+        maintenance costs feeding this session's retune objective.
+
+        `chaos=` attaches a `repro.serve.chaos.FaultInjector` to every
+        serving fault boundary; `policy=` overrides the degradation
+        ladder's `repro.distributed.fault.RetryPolicy`."""
         from repro.serve.query_server import QueryServer
 
         if maintenance is True:
@@ -291,7 +354,8 @@ class TuningSession:
 
             maintenance = MaintenanceConfig()
         return QueryServer(self._ensure_applied(), session=self,
-                           maintenance=maintenance)
+                           maintenance=maintenance, chaos=chaos,
+                           policy=policy)
 
     # ------------------------------------------------------------------
     # streaming ingestion (serverless path)

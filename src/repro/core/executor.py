@@ -24,6 +24,8 @@ the materialized extents.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
+
 import jax
 import numpy as np
 
@@ -37,13 +39,36 @@ from repro.rdf.triples import TripleStore
 from repro.views.materializer import materialize_state, materialize_state_device
 
 
+@dataclass
+class ExecutorSnapshot:
+    """Everything `swap_state`/`refresh` mutate, captured by reference
+    (dicts shallow-copied) so a failed hot swap restores the executor
+    object in place — a server holding it keeps serving the previous
+    program."""
+
+    store: object
+    state: State
+    groups: dict
+    queries: dict
+    dag: object
+    oracle_names: set
+    extents: dict
+    device_views: dict
+    infos: dict
+    tt: object
+    workload: object
+    results: dict | None
+
+
 class QueryExecutor:
     def __init__(self, store: TripleStore, state: State,
                  groups: dict[str, list[str]] | None = None,
                  use_pallas: bool = False, safety: float = 4.0,
                  max_retries: int = 12, cap_planner=None,
                  device_materialize: bool = False,
-                 workload_mode: str = "bucketed"):
+                 workload_mode: str = "bucketed",
+                 fault_hook=None):
+        self.fault_hook = fault_hook
         self.store = store
         self.state = state
         self.groups = groups or {q.name: [q.name] for q in state.queries}
@@ -91,9 +116,44 @@ class QueryExecutor:
             self.dag, store.stats, self.infos, safety=self._safety,
             use_pallas=self._use_pallas, max_retries=self._max_retries,
             cap_planner=self._cap_planner, mode=self._workload_mode,
-            carry_caps=carry_caps,
+            carry_caps=carry_caps, fault_hook=self.fault_hook,
         )
         self._results: dict[str, np.ndarray] | None = None
+
+    # ------------------------------------------------------------------
+    # transactional binding snapshots
+    # ------------------------------------------------------------------
+    def snapshot(self) -> ExecutorSnapshot:
+        """Capture every binding `swap_state`/`refresh` mutate."""
+        return ExecutorSnapshot(
+            store=self.store, state=self.state, groups=dict(self.groups),
+            queries=dict(self._queries), dag=self.dag,
+            oracle_names=set(self._oracle_names),
+            extents=dict(self.extents), device_views=dict(self.device_views),
+            infos=dict(self.infos), tt=self.tt, workload=self.workload,
+            results=self._results)
+
+    def restore(self, snap: ExecutorSnapshot) -> None:
+        """Roll the executor back to a snapshot, in place."""
+        self.store = snap.store
+        self.state = snap.state
+        self.groups = snap.groups
+        self._queries = snap.queries
+        self.dag = snap.dag
+        self._oracle_names = snap.oracle_names
+        self.extents = snap.extents
+        self.device_views = snap.device_views
+        self.infos = snap.infos
+        self.tt = snap.tt
+        self.workload = snap.workload
+        self._results = snap.results
+        self.__fns = None
+
+    def set_fault_hook(self, hook) -> None:
+        """Attach a chaos injector to this executor and its current
+        fused program (future programs inherit it automatically)."""
+        self.fault_hook = hook
+        self.workload.fault_hook = hook
 
     def refresh(self, store: TripleStore | None = None) -> None:
         """Point the executor at a maintained/replaced triple store:
@@ -101,10 +161,17 @@ class QueryExecutor:
         and recompiles the fused program against the fresh statistics.
         With no argument, refreshes device state from the current store
         (e.g. after in-place mutation).  Capacities the old program
-        learned adaptively are carried into the new one."""
+        learned adaptively are carried into the new one.  Transactional:
+        a failure mid-refresh restores the previous bindings."""
+        snap = self.snapshot()
         carry = self.workload.learned_caps()
-        self._load_device_state(store if store is not None else self.store,
-                                carry_caps=carry)
+        try:
+            self._load_device_state(
+                store if store is not None else self.store,
+                carry_caps=carry)
+        except Exception:
+            self.restore(snap)
+            raise
         self.__fns = None
 
     def swap_state(self, state: State,
@@ -126,29 +193,40 @@ class QueryExecutor:
         the serving path never pays a cold compile.  Returns the swap
         summary: {"materialized": [vid], "reused": [vid],
         "dropped": [prev_vid]}.
+
+        The swap is TRANSACTIONAL: any failure — materialization,
+        program construction, the pre-warm compile/run — rolls every
+        binding back to the snapshot taken on entry and re-raises, so
+        the executor object keeps serving the previous program.
         """
         from repro.views.materializer import materialize_state_delta
 
+        snap = self.snapshot()
         carry = self.workload.learned_caps()
-        extents, device, infos, reused, fresh, dropped = \
-            materialize_state_delta(state, self.store, self.state,
-                                    self.extents, self.infos,
-                                    self.device_views)
-        self.state = state
-        self.groups = groups or {q.name: [q.name] for q in state.queries}
-        self._queries = {q.name: q for q in state.queries}
-        self.extents, self.device_views, self.infos = extents, device, infos
-        self._build_dag()
-        self.workload = WorkloadExecutor(
-            self.dag, self.store.stats, self.infos, safety=self._safety,
-            use_pallas=self._use_pallas, max_retries=self._max_retries,
-            cap_planner=self._cap_planner, mode=self._workload_mode,
-            carry_caps=carry,
-        )
-        self._results = None
-        self.__fns = None
-        if warm:
-            self.warmup()
+        try:
+            extents, device, infos, reused, fresh, dropped = \
+                materialize_state_delta(state, self.store, self.state,
+                                        self.extents, self.infos,
+                                        self.device_views)
+            self.state = state
+            self.groups = groups or {q.name: [q.name] for q in state.queries}
+            self._queries = {q.name: q for q in state.queries}
+            self.extents, self.device_views, self.infos = \
+                extents, device, infos
+            self._build_dag()
+            self.workload = WorkloadExecutor(
+                self.dag, self.store.stats, self.infos, safety=self._safety,
+                use_pallas=self._use_pallas, max_retries=self._max_retries,
+                cap_planner=self._cap_planner, mode=self._workload_mode,
+                carry_caps=carry, fault_hook=self.fault_hook,
+            )
+            self._results = None
+            self.__fns = None
+            if warm:
+                self.warmup()
+        except Exception:
+            self.restore(snap)
+            raise
         return {"materialized": sorted(fresh), "reused": sorted(reused),
                 "dropped": dropped}
 
@@ -219,6 +297,22 @@ class QueryExecutor:
                 f"safety factor"
             )
         return E.to_numpy(out)
+
+    def answer_group_per_query(self, original_name: str
+                               ) -> set[tuple[int, ...]]:
+        """Union-group answer through the per-query unrolled path — the
+        serving ladder's first fallback when the fused program fails.
+        Each member compiles and runs alone (no shared subplans, raises
+        on overflow like the old engine); cartesian members fall back
+        to the oracle over the materialized extents as usual."""
+        out: set[tuple[int, ...]] = set()
+        for member in self.groups[original_name]:
+            if member in self._oracle_names:
+                out |= {tuple(r) for r in self.answer(member).tolist()}
+            else:
+                out |= {tuple(r)
+                        for r in self.answer_per_query(member).tolist()}
+        return out
 
     # ------------------------------------------------------------------
     def answer_direct(self, name: str) -> set[tuple[int, ...]]:

@@ -1,4 +1,4 @@
-"""Fault tolerance + straggler mitigation hooks.
+"""Fault tolerance: training supervision AND the serving supervisor.
 
 On a real multi-host cluster this wraps jax.distributed; the logic here
 is host-count agnostic and fully exercised in tests:
@@ -8,7 +8,23 @@ is host-count agnostic and fully exercised in tests:
   * StragglerMonitor — per-step timing watermarks; hosts slower than
     `threshold x median` over a window are flagged for replacement
     (the action hook is pluggable: on TPU pods this triggers a
-    re-slice / hot-spare swap).
+    re-slice / hot-spare swap),
+  * CircuitBreaker / ServingSupervisor — the generic half of the
+    serving-side fault tolerance used by `repro.serve.query_server`:
+    a deterministic (batch-counted, no wall clock) breaker over the
+    fused device path and an explicit health state machine
+    (HEALTHY / DEGRADED / STALE_ONLY / DOWN) with a transition log.
+    Deliberately free of any serving imports so the training and
+    serving layers share one fault vocabulary.
+
+Health states:
+
+  HEALTHY     the fused device path serves, answers fresh
+  DEGRADED    a fallback tier serves (per-query / host reference
+              engine), or answers exceed the staleness budget — every
+              answer is still exact for the snapshot it was computed on
+  STALE_ONLY  only last-known-good cached answers are servable
+  DOWN        nothing servable; requests fail loudly
 """
 from __future__ import annotations
 
@@ -18,6 +34,152 @@ from dataclasses import dataclass, field
 from typing import Callable
 
 from repro.checkpoint import checkpoint as C
+
+HEALTHY = "HEALTHY"
+DEGRADED = "DEGRADED"
+STALE_ONLY = "STALE_ONLY"
+DOWN = "DOWN"
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Retry/backoff policy for the serving ladder.
+
+    All quantities are deterministic batch counts, never wall-clock
+    sleeps: a serving batch is the supervisor's clock tick, so tests
+    and the chaos harness replay identically.
+    """
+
+    max_attempts: int = 2        # in-batch retries of the fused path
+    failure_threshold: int = 1   # consecutive failed batches to open
+    cooldown_batches: int = 1    # open-state batches before a probe
+    backoff_factor: float = 2.0  # cooldown growth per re-open
+    max_cooldown: int = 8        # backoff ceiling (batches)
+    call_timeout_seconds: float | None = None  # fused-call soft budget
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        if self.failure_threshold < 1:
+            raise ValueError("failure_threshold must be >= 1")
+        if self.cooldown_batches < 1:
+            raise ValueError("cooldown_batches must be >= 1")
+
+
+class CircuitBreaker:
+    """closed -> open -> half_open breaker, clocked in batches.
+
+    `allow()` is called once per batch before the protected path runs;
+    while open it burns one cooldown tick and refuses.  The half-open
+    state admits exactly one probe: success closes the breaker and
+    resets the cooldown, failure re-opens it with the cooldown grown by
+    `backoff_factor` (capped), so a persistent fault is probed ever
+    more rarely instead of hammered.
+    """
+
+    def __init__(self, policy: RetryPolicy | None = None):
+        self.policy = policy or RetryPolicy()
+        self.state = "closed"
+        self.failures = 0            # consecutive failures while closed
+        self.opens = 0               # lifetime open transitions
+        self._cooldown = self.policy.cooldown_batches
+        self._wait = 0
+
+    def allow(self) -> bool:
+        if self.state == "closed":
+            return True
+        if self.state == "open":
+            self._wait -= 1
+            if self._wait > 0:
+                return False
+            self.state = "half_open"
+        return True  # half_open: one probe
+
+    def record_success(self) -> None:
+        self.state = "closed"
+        self.failures = 0
+        self._cooldown = self.policy.cooldown_batches
+
+    def record_failure(self) -> None:
+        if self.state == "half_open":
+            # failed probe: back off harder
+            self._cooldown = min(
+                max(int(self._cooldown * self.policy.backoff_factor),
+                    self._cooldown + 1),
+                self.policy.max_cooldown)
+            self._open()
+            return
+        self.failures += 1
+        if self.failures >= self.policy.failure_threshold:
+            self._open()
+
+    def _open(self) -> None:
+        self.state = "open"
+        self.failures = 0
+        self._wait = self._cooldown
+        self.opens += 1
+
+
+@dataclass(frozen=True)
+class HealthTransition:
+    batch: int
+    previous: str
+    health: str
+    reason: str
+
+
+class ServingSupervisor:
+    """Health state machine for a degradation-ladder server.
+
+    The server reports which tier answered each batch (0 fused,
+    1 per-query, 2 reference engine, 3 last-known-good cache) and
+    whether the batch was stale; the supervisor owns the breaker over
+    the fused path and the HEALTHY/DEGRADED/STALE_ONLY/DOWN state with
+    a bounded transition log.
+    """
+
+    MAX_TRANSITIONS = 64
+
+    def __init__(self, policy: RetryPolicy | None = None):
+        self.policy = policy or RetryPolicy()
+        self.fused = CircuitBreaker(self.policy)
+        self.health = HEALTHY
+        self.batches = 0
+        self.transitions: list[HealthTransition] = []
+
+    def begin_batch(self) -> int:
+        self.batches += 1
+        return self.batches
+
+    def observe(self, tier: int | None, stale: bool,
+                reason: str = "", degraded: bool = False) -> str:
+        """Fold one served batch into the health state.  `tier=None`
+        means the batch could not be served at all; `degraded=True`
+        forces at least DEGRADED even for a tier-0 batch (e.g. one that
+        only served after an integrity repair)."""
+        if tier is None:
+            to = DOWN
+        elif tier >= 3:
+            to = STALE_ONLY
+        elif tier > 0 or stale or degraded:
+            to = DEGRADED
+        else:
+            to = HEALTHY
+        self._set(to, reason or f"served by tier {tier}"
+                  + (" (stale)" if stale else ""))
+        return self.health
+
+    def _set(self, to: str, reason: str) -> None:
+        if to == self.health:
+            return
+        self.transitions.append(HealthTransition(
+            self.batches, self.health, to, reason))
+        del self.transitions[:-self.MAX_TRANSITIONS]
+        self.health = to
+
+    def ready(self) -> bool:
+        """Readiness: the server can answer something (possibly stale)."""
+        return self.health != DOWN
 
 
 @dataclass

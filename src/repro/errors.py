@@ -18,6 +18,18 @@ class InvariantViolation(RuntimeError):
     """
 
 
+class ServiceUnavailable(RuntimeError):
+    """Every tier of the serving degradation ladder failed for a batch.
+
+    Raised by `repro.serve.query_server.QueryServer` only when the fused
+    device path, the per-query fallback, the host reference engine AND
+    the last-known-good cache all failed to produce an answer — the
+    server is DOWN and says so instead of returning anything silently
+    wrong.  The request may be retried: the ladder re-runs per batch
+    and recovers as soon as any tier heals.
+    """
+
+
 def require(condition: bool, message: str) -> None:
     """``assert`` replacement that survives ``python -O``."""
     if not condition:

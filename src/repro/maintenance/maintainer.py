@@ -101,6 +101,7 @@ class MaintenanceReport:
     removed: dict[int, int] = field(default_factory=dict)
     delta_candidates: int = 0
     oracle_views: int = 0
+    extents_scanned: int = 0    # deletion pass: extents actually visited
     extent_growths: list[int] = field(default_factory=list)
     tt_grew: bool = False
     seconds: float = 0.0
@@ -166,6 +167,7 @@ class ViewMaintainer:
         self.extent_growths = 0
         self.tt_growths = 0
         self.oracle_batches = 0
+        self.delete_scans = 0    # extents visited by deletion passes
         self.drift = None  # type: DriftDetector | None
         self._bind(executor)
 
@@ -196,6 +198,20 @@ class ViewMaintainer:
         # engine's deferred-upload set (one transfer per touched view)
         self._ext_keys = {vid: set(_row_bytes(executor.extents[vid].rows))
                           for vid in executor.state.views}
+        # per-predicate inverted index over view extents: the deletion
+        # pass only visits extents whose view mentions a deleted
+        # predicate (plus views with a variable predicate, which can
+        # lose a row on any delete) — sub-linear in the view count
+        # instead of scanning every candidate extent per batch
+        self._pred_vids: dict[int, set[int]] = {}
+        self._wild_vids: set[int] = set()
+        for vid, view in executor.state.views.items():
+            const_preds = [a.p.id for a in view.cq.atoms
+                           if isinstance(a.p, Const)]
+            if len(const_preds) < len(view.cq.atoms):
+                self._wild_vids.add(vid)
+            for p in const_preds:
+                self._pred_vids.setdefault(p, set()).add(vid)
         self._dirty: dict[int, int] = {}  # vid -> target capacity
         self.tt_cap = capacity_for(len(executor.store),
                                    safety=self.cfg.tt_safety)
@@ -231,6 +247,30 @@ class ViewMaintainer:
     # the per-batch maintenance pass
     # ------------------------------------------------------------------
     def apply(self, delta: Delta) -> MaintenanceReport:
+        """One maintenance pass, TRANSACTIONAL: the executor bindings
+        (store, TT, extents, device buffers) and this maintainer's
+        bookkeeping are snapshotted first; any failure rolls them all
+        back and re-raises, so the pre-delta state keeps serving and
+        the caller can requeue the delta (`UpdateStream.push_front`).
+        Only the measured-cost EWMAs are not rolled back — they are
+        telemetry, not serving state."""
+        ex = self.executor
+        hook = getattr(ex, "fault_hook", None)
+        if hook is not None:
+            hook.fire("maintenance_apply")
+        ex_snap = ex.snapshot()
+        keys_snap, rows_snap = dict(self._ext_keys), dict(self._info_rows)
+        cap_snap = self.tt_cap
+        try:
+            return self._apply(delta)
+        except Exception:
+            ex.restore(ex_snap)
+            self._ext_keys, self._info_rows = keys_snap, rows_snap
+            self.tt_cap = cap_snap
+            self._dirty = {}
+            raise
+
+    def _apply(self, delta: Delta) -> MaintenanceReport:
         ex = self.executor
         t0 = time.perf_counter()
         store = ex.store
@@ -276,15 +316,17 @@ class ViewMaintainer:
                      report: MaintenanceReport) -> None:
         ex = self.executor
         del_preds = set(np.unique(eff_del[:, 1]).tolist())
-        for vid, view in ex.state.views.items():
+        # inverted index: only extents whose view can actually lose a
+        # row are visited — everything else is never even iterated
+        candidates = set(self._wild_vids)
+        for p in del_preds:
+            candidates |= self._pred_vids.get(p, set())
+        for vid in sorted(candidates):
             if vid in skip:
                 continue
-            # a view whose atoms all name predicates outside the deleted
-            # set cannot lose a row — skip the extent scan entirely
-            preds = [a.p.id for a in view.cq.atoms if isinstance(a.p, Const)]
-            if len(preds) == len(view.cq.atoms) \
-                    and not del_preds.intersection(preds):
-                continue
+            view = ex.state.views[vid]
+            self.delete_scans += 1
+            report.extents_scanned += 1
             rel = ex.extents[vid]
             keep = retract_mask(view.cq, rel.rows, eff_del)
             gone = int(len(keep) - int(keep.sum()))
@@ -302,7 +344,10 @@ class ViewMaintainer:
                 ex.device_views[vid] = _device_delete(prel.data,
                                                       jnp.asarray(keep_dev),
                                                       prel.overflow)
-            self._ext_keys[vid].difference_update(_row_bytes(rel.rows[~keep]))
+            # copy-on-write: apply()'s rollback restores a shallow copy
+            # of _ext_keys, so entries must be replaced, never mutated
+            self._ext_keys[vid] = \
+                self._ext_keys[vid] - set(_row_bytes(rel.rows[~keep]))
             ex.extents[vid] = R.Relation(rel.rows[keep], rel.cols)
             report.removed[vid] = gone
 
@@ -336,7 +381,8 @@ class ViewMaintainer:
                 fresh_at.append(i)
             if not fresh_at:
                 continue
-            seen.update(fresh_keys)
+            # copy-on-write (see _delete_pass): replace, never mutate
+            self._ext_keys[vid] = seen | fresh_keys
             fresh = cand[np.asarray(fresh_at)]
             self._append_rows(vid, fresh, report)
             report.appended[vid] = len(fresh)
@@ -479,6 +525,7 @@ class ViewMaintainer:
             "tt_growths": self.tt_growths,
             "tt_cap": self.tt_cap,
             "oracle_views": len(self.plans.oracle_vids),
+            "delete_scans": self.delete_scans,
             "delta_plans": len(self.plans.plans),
             "delta_leaves": len(self.plans.leaves),
             "measured_views": len(self.costs),

@@ -60,6 +60,16 @@ class UpdateStream:
         self.total_applied += delta.size
         return delta
 
+    def push_front(self, delta: Delta) -> None:
+        """Requeue a delta whose maintenance apply failed: it goes back
+        to the head of the queue (sequential semantics preserved) and is
+        un-counted from `total_applied` so backlog accounting stays
+        truthful while the serving layer reports staleness."""
+        if delta.size == 0:
+            return
+        self._queue.appendleft(delta)
+        self.total_applied -= delta.size
+
     def coalesce(self) -> Delta | None:
         """Pop and merge the whole backlog into ONE net batch (one device
         maintenance pass instead of one per submit), preserving

@@ -696,6 +696,7 @@ class BucketedProgram:
             "bucket_signatures": len(self.signatures()),
             "bucket_compiles": self.cache_misses,
             "bucket_cache_hits": self.cache_hits,
+            "bucket_cache_misses": self.cache_misses,
             "bucket_compile_seconds": self.compile_seconds,
             "bucket_compile_log": list(self.compile_log),
             "bucket_promotions": sum(b.promotions for b in self.buckets),

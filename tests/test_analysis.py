@@ -253,6 +253,37 @@ def test_rules_catch_unhashable_static_arg():
     assert {"rules/unhashable-static", "rules/mutable-default"} <= rules
 
 
+def test_rules_catch_swallowed_exception():
+    swallow = (
+        "def f():\n"
+        "    try:\n"
+        "        g()\n"
+        "    except Exception:\n"
+        "        pass\n"
+    )
+    # only the serving/maintenance/api packages are in scope
+    assert _rules(check_source(swallow, "serve/m.py")) \
+        == {"rules/swallowed-exception"}
+    assert _rules(check_source(swallow, "maintenance/m.py")) \
+        == {"rules/swallowed-exception"}
+    assert check_source(swallow, "query/m.py") == []
+    # a bare `except:` that only rebinds a name swallows too
+    bare = "try:\n    g()\nexcept:\n    x = None\n"
+    assert _rules(check_source(bare, "api/m.py")) \
+        == {"rules/swallowed-exception"}
+    # handlers that re-raise, call anything (rollback/telemetry), or
+    # catch a NARROW type are the fault-tolerant contract — not flagged
+    reraise = "try:\n    g()\nexcept Exception:\n    raise\n"
+    assert check_source(reraise, "serve/m.py") == []
+    handled = "try:\n    g()\nexcept Exception as e:\n    log(e)\n"
+    assert check_source(handled, "serve/m.py") == []
+    narrow = "try:\n    g()\nexcept KeyError:\n    x = None\n"
+    assert check_source(narrow, "serve/m.py") == []
+    optout = ("try:\n    g()\n"
+              "except Exception:  # lint: allow-swallow\n    pass\n")
+    assert check_source(optout, "serve/m.py") == []
+
+
 def test_repo_rules_clean_on_library():
     report = analyze_repo()
     assert report.clean(), report.format()

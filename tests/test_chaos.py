@@ -1,0 +1,449 @@
+"""Fault-tolerant serving core (repro.serve.chaos + the degradation
+ladder in repro.serve.query_server).
+
+Correctness bar: under EVERY injectable fault class, an answered batch
+either equals the host reference engine over the server's current store
+or is explicitly flagged degraded/stale in `ServeStats.last_batch` —
+never silently wrong.  Availability bar: the only batches that fail
+raise `ServiceUnavailable` (all tiers + last-known-good exhausted), and
+once a fault clears the server returns to HEALTHY within the breaker's
+deterministic cooldown.  Property-tested over random fault schedules
+with a deterministic twin, in the house style of test_maintenance.py.
+"""
+import numpy as np
+import pytest
+
+from repro.core.queries import CQ, Atom, Const, Var
+from repro.distributed.fault import (CircuitBreaker, RetryPolicy,
+                                     ServingSupervisor)
+from repro.errors import ServiceUnavailable
+from repro.maintenance import MaintenanceConfig
+from repro.rdf.triples import TripleStore
+from repro.serve.chaos import FaultInjector, FaultSpec, InjectedFault
+
+PREDS = [1, 2, 3, 4, 5]
+
+
+def _random_store(rng, n=600, n_ids=60):
+    tt = np.stack([rng.integers(0, n_ids, n), rng.choice(PREDS, n),
+                   rng.integers(0, n_ids, n)], axis=1).astype(np.int32)
+    return TripleStore(tt)
+
+
+def _random_batch(rng, n, n_ids=60):
+    return np.stack([rng.integers(0, n_ids, n), rng.choice(PREDS, n),
+                     rng.integers(0, n_ids, n)], axis=1).astype(np.int32)
+
+
+def _chain_cq(name, p1, p2):
+    x, y, z = Var("x"), Var("y"), Var("z")
+    return CQ(name=name, head=(x, y, z),
+              atoms=(Atom(x, Const(p1), y), Atom(y, Const(p2), z)))
+
+
+def _session(store, workload):
+    from repro.api import TuningSession
+
+    s = TuningSession(store, workload=workload)
+    s.retune()
+    s.apply()
+    return s
+
+
+def _streaming_server(rng, queries=(("q1", 1, 2),), chaos=None, policy=None,
+                      cfg=None):
+    """A maintenance-enabled server: submitting a delta before a batch
+    forces the fused program to actually re-run (cache dropped), so the
+    device-side fault sites fire."""
+    sess = _session(_random_store(rng),
+                    [_chain_cq(n, a, b) for n, a, b in queries])
+    srv = sess.serve(maintenance=cfg or MaintenanceConfig(), chaos=chaos,
+                     policy=policy)
+    return sess, srv
+
+
+def _oracle(srv, name):
+    return srv.executor.answer_group_direct(name)
+
+
+# ----------------------------------------------------------------------
+# primitives: breaker, supervisor, injector
+# ----------------------------------------------------------------------
+def test_circuit_breaker_opens_probes_and_backs_off():
+    b = CircuitBreaker(RetryPolicy(failure_threshold=2, cooldown_batches=2,
+                                   backoff_factor=2.0, max_cooldown=4))
+    assert b.allow() and b.state == "closed"
+    b.record_failure()
+    assert b.state == "closed"  # below threshold
+    b.record_failure()
+    assert b.state == "open" and b.opens == 1
+    assert not b.allow()        # cooldown tick 1
+    assert b.allow() and b.state == "half_open"  # probe admitted
+    b.record_failure()          # failed probe: cooldown 2 -> 4 (capped)
+    assert b.state == "open" and b.opens == 2
+    assert not b.allow() and not b.allow() and not b.allow()
+    assert b.allow() and b.state == "half_open"
+    b.record_success()
+    assert b.state == "closed" and b.allow()
+
+
+def test_supervisor_health_transitions_logged_and_bounded():
+    sup = ServingSupervisor()
+    sup.begin_batch()
+    assert sup.observe(0, stale=False) == "HEALTHY" and sup.ready()
+    sup.begin_batch()
+    assert sup.observe(1, stale=False) == "DEGRADED"
+    sup.begin_batch()
+    assert sup.observe(0, stale=False, degraded=True) == "DEGRADED"
+    sup.begin_batch()
+    assert sup.observe(3, stale=True) == "STALE_ONLY" and sup.ready()
+    sup.begin_batch()
+    assert sup.observe(None, stale=False) == "DOWN" and not sup.ready()
+    sup.begin_batch()
+    assert sup.observe(0, stale=False) == "HEALTHY"
+    assert [t.health for t in sup.transitions] == \
+        ["DEGRADED", "STALE_ONLY", "DOWN", "HEALTHY"]
+    for _ in range(3 * sup.MAX_TRANSITIONS):
+        sup.observe(1, stale=False)
+        sup.observe(0, stale=False)
+    assert len(sup.transitions) <= sup.MAX_TRANSITIONS
+
+
+def test_fault_injector_schedule_and_autoclear():
+    chaos = FaultInjector()
+    chaos.arm("device_call", after=1, count=2)
+    chaos.fire("device_call")  # clean (after=1)
+    with pytest.raises(InjectedFault):
+        chaos.fire("device_call")
+    with pytest.raises(InjectedFault):
+        chaos.fire("device_call")
+    chaos.fire("device_call")  # exhausted: auto-cleared
+    assert not chaos.armed("device_call") and chaos.injected == 2
+    with pytest.raises(ValueError):
+        FaultSpec(site="nonsense")
+
+
+# ----------------------------------------------------------------------
+# satellite: telemetry key regression (bucket_cache_misses)
+# ----------------------------------------------------------------------
+def test_bucket_cache_misses_wired_from_real_key():
+    rng = np.random.default_rng(0)
+    sess = _session(_random_store(rng), [_chain_cq("q1", 1, 2)])
+    srv = sess.serve()
+    srv.answer("q1")
+    t = sess.executor.telemetry()
+    assert "bucket_cache_misses" in t
+    assert srv.stats.bucket_cache_misses == t["bucket_cache_misses"]
+
+
+# ----------------------------------------------------------------------
+# ladder: one fault class at a time
+# ----------------------------------------------------------------------
+def test_single_device_fault_masked_by_in_batch_retry():
+    rng = np.random.default_rng(1)
+    chaos = FaultInjector()
+    sess, srv = _streaming_server(rng, chaos=chaos)
+    srv.submit(inserts=_random_batch(rng, 8))
+    chaos.arm("device_call", count=1)  # one failure < max_attempts
+    got = srv.answer("q1")
+    assert got == _oracle(srv, "q1")
+    assert srv.stats.health == "HEALTHY"
+    assert srv.stats.last_batch == {"tier": 0, "degraded": False,
+                                    "stale": False}
+    assert chaos.injected == 1  # the fault really fired
+
+
+def test_device_fault_degrades_to_per_query_then_recovers():
+    rng = np.random.default_rng(2)
+    chaos = FaultInjector()
+    sess, srv = _streaming_server(rng, chaos=chaos)
+    srv.submit(inserts=_random_batch(rng, 8))
+    chaos.arm("device_call", count=2)  # defeats both in-batch attempts
+    got = srv.answer("q1")
+    assert got == _oracle(srv, "q1")  # tier 1 is exact
+    assert srv.stats.served_tier == 1
+    assert srv.stats.health == "DEGRADED"
+    assert srv.stats.fused_failures == 1
+    assert srv.stats.breaker_opens == 1
+    assert srv.readiness()["ready"]
+    # fault cleared: the next batch is the breaker's half-open probe
+    srv.submit(inserts=_random_batch(rng, 8))
+    got = srv.answer("q1")
+    assert got == _oracle(srv, "q1")
+    assert srv.stats.served_tier == 0 and srv.stats.health == "HEALTHY"
+    assert srv.stats.breaker_state == "closed"
+
+
+def test_timeout_fault_counts_as_failure():
+    rng = np.random.default_rng(3)
+    chaos = FaultInjector()
+    sess, srv = _streaming_server(rng, chaos=chaos)
+    srv.submit(inserts=_random_batch(rng, 8))
+    chaos.arm("device_call", count=2, kind="timeout")
+    assert srv.answer("q1") == _oracle(srv, "q1")
+    assert srv.stats.health == "DEGRADED" and srv.stats.served_tier == 1
+
+
+def test_capacity_overflow_storm_degrades_and_recovers():
+    rng = np.random.default_rng(4)
+    chaos = FaultInjector()
+    sess, srv = _streaming_server(rng, chaos=chaos)
+    srv.submit(inserts=_random_batch(rng, 8))
+    chaos.arm("capacity_overflow", count=2)
+    assert srv.answer("q1") == _oracle(srv, "q1")
+    assert srv.stats.health == "DEGRADED"
+    srv.submit(inserts=_random_batch(rng, 8))
+    assert srv.answer("q1") == _oracle(srv, "q1")
+    assert srv.stats.health == "HEALTHY"
+
+
+def test_compile_fault_on_hot_swapped_program():
+    rng = np.random.default_rng(5)
+    chaos = FaultInjector()
+    sess, srv = _streaming_server(rng, chaos=chaos)
+    assert srv.answer("q1") == _oracle(srv, "q1")
+    srv.invalidate()             # fresh program: next run must compile
+    chaos.arm("compile", count=2)
+    assert srv.answer("q1") == _oracle(srv, "q1")
+    assert srv.stats.served_tier == 1 and srv.stats.health == "DEGRADED"
+    assert srv.answer("q1") == _oracle(srv, "q1")
+    assert srv.stats.health == "HEALTHY"
+
+
+def test_maintenance_fault_requeues_delta_and_serves_stale():
+    rng = np.random.default_rng(6)
+    chaos = FaultInjector()
+    sess, srv = _streaming_server(rng, chaos=chaos)
+    pre = srv.answer("q1")                  # healthy baseline
+    delta = _random_batch(rng, 16)
+    srv.submit(inserts=delta)
+    chaos.arm("maintenance_apply", count=1)
+    got = srv.answer("q1")
+    # the failed pass rolled back: answers match the PRE-delta store,
+    # and the batch is flagged stale (backlog exceeds the 0 budget)
+    assert got == pre == _oracle(srv, "q1")
+    assert srv.stats.maintenance_failures == 1
+    assert srv.stats.last_batch["stale"] is True
+    assert srv.stats.health == "DEGRADED"
+    assert srv.stream.pending_triples == len(delta)  # requeued, not lost
+    # fault cleared: the requeued delta drains and serving is fresh
+    got = srv.answer("q1")
+    assert srv.stream.pending_triples == 0
+    assert got == _oracle(srv, "q1")
+    assert srv.stats.health == "HEALTHY"
+    assert srv.stats.last_batch["stale"] is False
+
+
+def test_mid_pass_maintenance_failure_rolls_back_executor():
+    from repro.maintenance import Delta, ViewMaintainer
+
+    rng = np.random.default_rng(7)
+    sess = _session(_random_store(rng), [_chain_cq("q1", 1, 2)])
+    m = ViewMaintainer(sess.executor, MaintenanceConfig())
+    before = {vid: rel.rows.copy()
+              for vid, rel in sess.executor.extents.items()}
+    store_before = sess.executor.store
+
+    class Boom(RuntimeError):
+        pass
+
+    def explode(*a, **k):
+        raise Boom("mid-pass device failure")
+
+    m._insert_pass = explode    # fail AFTER the delete pass + TT upload
+    with pytest.raises(Boom):
+        m.apply(Delta.of(_random_batch(rng, 16), None))
+    assert sess.executor.store is store_before  # bindings rolled back
+    for vid, rows in before.items():
+        np.testing.assert_array_equal(sess.executor.extents[vid].rows, rows)
+    assert sess.answer("q1") == sess.executor.answer_group_direct("q1")
+
+
+def test_corrupted_extent_detected_repaired_never_served():
+    rng = np.random.default_rng(8)
+    chaos = FaultInjector()
+    sess, srv = _streaming_server(rng, chaos=chaos)
+    assert srv.answer("q1") == _oracle(srv, "q1")
+    vid = chaos.corrupt_extent(srv.executor)
+    assert len(srv.executor.extents[vid].rows) != \
+        int(srv.executor.device_views[vid].n)
+    got = srv.answer("q1")
+    assert got == _oracle(srv, "q1")   # repaired BEFORE serving: exact
+    assert srv.stats.integrity_failures == 1
+    assert srv.stats.repairs == 1
+    assert srv.stats.health == "DEGRADED"  # repair marks the batch
+    assert srv.answer("q1") == _oracle(srv, "q1")
+    assert srv.stats.health == "HEALTHY"
+
+
+# ----------------------------------------------------------------------
+# transactional retunes (satellite: retune_online rollback)
+# ----------------------------------------------------------------------
+def test_retune_online_rolls_back_on_retune_failure():
+    rng = np.random.default_rng(9)
+    chaos = FaultInjector()
+    sess, srv = _streaming_server(rng, chaos=chaos)
+    baseline = srv.answer("q1")
+    names_before = {q.name for q in sess.workload}
+    best_before = sess.best
+    chaos.arm("retune", count=1)
+    with pytest.raises(InjectedFault):
+        srv.retune_online(add=[_chain_cq("q9", 2, 3)])
+    # the docstring's promise: a failed edit leaves EVERYTHING untouched
+    assert {q.name for q in sess.workload} == names_before
+    assert sess.best is best_before
+    assert srv.stats.retune_rollbacks == 1 and srv.stats.retunes == 0
+    assert srv.answer("q1") == baseline == _oracle(srv, "q1")
+    assert "q9" not in srv.executor.groups
+
+
+def test_retune_online_rolls_back_on_apply_failure():
+    rng = np.random.default_rng(10)
+    chaos = FaultInjector()
+    sess, srv = _streaming_server(rng, chaos=chaos)
+    srv.answer("q1")
+    best_before = sess.best
+    chaos.arm("apply", count=1)   # retune succeeds, the hot swap dies
+    with pytest.raises(InjectedFault):
+        srv.retune_online(add=[_chain_cq("q9", 2, 3)])
+    assert sess.best is best_before   # retune result rolled back too
+    assert "q9" not in {q.name for q in sess.workload}
+    assert srv.answer("q1") == _oracle(srv, "q1")  # old program serves
+    # and the edit succeeds once the fault is gone
+    srv.retune_online(add=[_chain_cq("q9", 2, 3)])
+    assert srv.stats.retunes == 1
+    assert srv.answer("q9") == _oracle(srv, "q9")
+
+
+def test_drift_retune_failure_never_takes_serving_down():
+    rng = np.random.default_rng(11)
+    chaos = FaultInjector()
+    sess = _session(_random_store(rng),
+                    [_chain_cq("q1", 1, 2), _chain_cq("q2", 2, 3)])
+    srv = sess.serve(maintenance=MaintenanceConfig(
+        staleness_budget=0, drift_window=3, drift_rate_factor=2.0,
+        drift_min_triples=32), chaos=chaos)
+    for _ in range(4):
+        srv.submit(inserts=_random_batch(rng, 4))
+        srv.answer("q1")
+    chaos.arm("retune", count=None)  # sticky: every drift retune dies
+    for _ in range(6):
+        b = _random_batch(rng, 160)
+        b[:, 1] = 5
+        srv.submit(inserts=b)
+        assert srv.answer("q1") == _oracle(srv, "q1")
+    assert srv.stats.retune_failures >= 1   # drift fired and was absorbed
+    assert srv.stats.drift_retunes == 0
+    chaos.clear()
+    assert srv.answer("q2") == _oracle(srv, "q2")
+    assert srv.stats.health == "HEALTHY"
+
+
+# ----------------------------------------------------------------------
+# deep ladder: last-known-good and DOWN
+# ----------------------------------------------------------------------
+def _arm_all_exact_tiers(chaos):
+    chaos.arm("device_call", count=None)
+    chaos.arm("per_query_call", count=None)
+    chaos.arm("ref_engine_call", count=None)
+
+
+def test_last_known_good_serves_stale_when_all_tiers_fail():
+    rng = np.random.default_rng(12)
+    chaos = FaultInjector()
+    sess, srv = _streaming_server(rng, chaos=chaos)
+    lkg = srv.answer("q1")            # healthy batch populates the LKG
+    _arm_all_exact_tiers(chaos)
+    srv.submit(inserts=_random_batch(rng, 16))  # forces a real re-run
+    got = srv.answer("q1")
+    assert got == lkg                 # the cached answer, not garbage
+    assert srv.stats.served_tier == 3
+    assert srv.stats.health == "STALE_ONLY"
+    assert srv.stats.last_batch["stale"] is True
+    assert srv.readiness()["ready"]   # stale is still ready
+    chaos.clear()
+    got = srv.answer("q1")
+    assert got == _oracle(srv, "q1")  # fresh again (post-delta oracle)
+    assert srv.stats.health == "HEALTHY"
+
+
+def test_service_unavailable_when_no_tier_and_no_lkg():
+    rng = np.random.default_rng(13)
+    chaos = FaultInjector()
+    sess, srv = _streaming_server(rng, chaos=chaos)
+    srv.invalidate()                  # drop the warmed result cache
+    _arm_all_exact_tiers(chaos)       # fresh server: LKG is empty
+    with pytest.raises(ServiceUnavailable):
+        srv.answer("q1")
+    assert srv.stats.health == "DOWN"
+    assert not srv.readiness()["ready"]
+    chaos.clear()
+    assert srv.answer("q1") == _oracle(srv, "q1")
+    assert srv.stats.health == "HEALTHY" and srv.readiness()["ready"]
+
+
+# ----------------------------------------------------------------------
+# property: no silently wrong answers under ANY fault schedule
+# ----------------------------------------------------------------------
+def _chaos_invariant_stream(seed, steps=6):
+    """Random fault schedule; the invariant is checked every batch:
+    an answered batch equals the reference engine over the server's
+    current store, OR it is flagged degraded/stale.  HEALTHY batches
+    must be exact and fresh."""
+    rng = np.random.default_rng(seed)
+    chaos = FaultInjector()
+    sess, srv = _streaming_server(rng, queries=(("q1", 1, 2), ("q2", 2, 3)),
+                                  chaos=chaos)
+    srv.answer_batch(["q1", "q2"])  # healthy start: LKG populated
+    sites = ["device_call", "capacity_overflow", "compile",
+             "maintenance_apply", "per_query_call", "ref_engine_call"]
+    for _ in range(steps):
+        site = sites[int(rng.integers(0, len(sites)))]
+        chaos.arm(site, count=int(rng.integers(1, 4)))
+        if int(rng.integers(0, 2)):
+            chaos.arm(sites[int(rng.integers(0, len(sites)))],
+                      count=int(rng.integers(1, 3)))
+        srv.submit(inserts=_random_batch(rng, int(rng.integers(4, 24))))
+        try:
+            out = srv.answer_batch(["q1", "q2"])
+        except ServiceUnavailable:
+            assert srv.stats.health == "DOWN"
+            chaos.clear()
+            continue
+        last = srv.stats.last_batch
+        for name, got in zip(["q1", "q2"], out):
+            if last["degraded"] or last["stale"]:
+                continue          # flagged: allowed to lag the store
+            assert got == srv.executor.answer_group_direct(name), \
+                f"silently wrong answer for {name} under {site}"
+        if srv.stats.health == "HEALTHY":
+            assert not last["degraded"] and not last["stale"]
+        chaos.clear()
+    # recovery: with no faults armed the server must return to HEALTHY
+    for _ in range(3):
+        srv.answer_batch(["q1", "q2"])
+    assert srv.stats.health == "HEALTHY"
+    assert srv.answer("q1") == _oracle(srv, "q1")
+    return srv
+
+
+def test_chaos_property_random_fault_schedules():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    # few examples: each replays a full serving stream under injected
+    # faults (the compile cache makes later examples cheap)
+    @settings(max_examples=4, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(seed=st.integers(0, 10**6))
+    def run(seed):
+        _chaos_invariant_stream(seed, steps=4)
+
+    run()
+
+
+def test_chaos_deterministic_twin():
+    srv = _chaos_invariant_stream(seed=4242)
+    assert srv.stats.batches >= 10
+    assert srv.stats.faults  # the schedule really injected something

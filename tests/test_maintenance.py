@@ -212,6 +212,41 @@ def test_maintainer_delete_only_and_insert_only_batches():
         np.testing.assert_array_equal(got, _extent_oracle(view.cq, ex.store))
 
 
+def test_delete_pass_scans_only_inverted_index_candidates():
+    rng = np.random.default_rng(21)
+    store = _random_store(rng)
+    sess = _session(store, [_chain_cq("q1", 1, 2), _chain_cq("q2", 3, 4)])
+    m = ViewMaintainer(sess.executor, MaintenanceConfig())
+    ex = sess.executor
+    maintained = set(ex.state.views) - m.plans.oracle_vids
+
+    def expected_scans(preds):
+        cand = set(m._wild_vids)
+        for p in preds:
+            cand |= m._pred_vids.get(p, set())
+        return len(cand - m.plans.oracle_vids)
+
+    # pred-5 deletes: NO view mentions predicate 5, so only views with a
+    # variable-predicate atom can lose a row — everything else is never
+    # even iterated (sub-linear in the view count)
+    only5 = store.triples[store.triples[:, 1] == 5][:16]
+    r5 = m.apply(Delta.of(None, only5))
+    assert r5.extents_scanned == expected_scans({5})
+    assert r5.extents_scanned < len(maintained)
+
+    # pred-1 deletes: exactly the pred-1 views plus the wild ones
+    cur = ex.store.triples
+    only1 = cur[cur[:, 1] == 1][:16]
+    r1 = m.apply(Delta.of(None, only1))
+    assert r1.extents_scanned == expected_scans({1})
+    assert m.telemetry()["delete_scans"] == \
+        r5.extents_scanned + r1.extents_scanned
+    # sub-linear bookkeeping never trades away correctness
+    for vid, view in ex.state.views.items():
+        got = np.unique(ex.extents[vid].rows, axis=0)
+        np.testing.assert_array_equal(got, _extent_oracle(view.cq, ex.store))
+
+
 # ----------------------------------------------------------------------
 # serving: staleness budget, drift retune, measured costs
 # ----------------------------------------------------------------------

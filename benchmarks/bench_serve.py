@@ -1,0 +1,209 @@
+"""Serving frontend under open-loop traffic: the "millions of users"
+story measured, not asserted.
+
+A tuned LUBM session serves through `ServingFrontend` while the load
+generator replays seeded Poisson arrivals (plus a streaming update
+component) at three offered-load levels — 0.5x, 1.0x and 1.5x of the
+server's nominal batch capacity.  The batch service model is CALIBRATED
+from real measured dispatches (one full batch and one singleton through
+the live `QueryServer`, plus a measured maintenance drain), then the
+traffic runs on the virtual clock: deterministic under the seed, with
+latencies denominated in calibrated virtual seconds.
+
+Reported per class and per level: p50/p99/mean latency, throughput,
+shed/downgrade counts and SLO compliance; plus the no-admission FIFO
+baseline at the overload level.  The acceptance story is asserted
+in-process before BENCH_serve.json is written:
+
+  * at 0.5x (the CI gate level): zero sheds and the top class's p99
+    within its SLO budget,
+  * at 1.5x with admission control: shed rate > 0 AND the top class's
+    p99 still within SLO,
+  * at 1.5x without admission (FIFO, unbounded queue): the top class's
+    p99 breaches — admission control is what holds the SLO.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.bench_common import emit, quick_mode, write_bench_json
+from repro.api import (MaintenanceConfig, QualityWeights, SearchConfig,
+                       TuningSession, WizardConfig)
+from repro.rdf.generator import generate, lubm_workload
+from repro.serve.frontend import (FixedServiceModel, FrontendConfig,
+                                  QueryClass, ServingFrontend, VirtualClock)
+from repro.serve.loadgen import ClassSpec, TrafficConfig, run_open_loop
+
+MAX_BATCH = 16
+QUEUE_CAP = 64
+LEVELS = (("0.5x", 0.5), ("1.0x", 1.0), ("1.5x", 1.5))
+
+
+def _cfg() -> WizardConfig:
+    return WizardConfig(search=SearchConfig(
+        strategy="greedy", max_states=400,
+        weights=QualityWeights(w_exec=1.0, w_maint=1.0, w_space=1.0)))
+
+
+def _update(rng, store, size=8):
+    tt = store.triples
+    return np.stack([rng.choice(np.unique(tt[:, 0]), size),
+                     rng.choice(np.unique(tt[:, 1]), size),
+                     rng.choice(np.unique(tt[:, 2]), size)],
+                    axis=1).astype(np.int32)
+
+
+def _measure(fn, iters: int) -> float:
+    fn()  # warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def calibrate(session, names, rng, iters: int) -> FixedServiceModel:
+    """Fit the virtual batch service model to the live server: base +
+    per-request from measured full/singleton dispatches, per-maintained-
+    triple from a measured update drain."""
+    srv = session.serve(maintenance=MaintenanceConfig(auto_retune=False))
+    full = (names * MAX_BATCH)[:MAX_BATCH]
+    w_full = _measure(lambda: srv.answer_batch(full), iters)
+    w_one = _measure(lambda: srv.answer_batch(names[:1]), iters)
+    per_request = max((w_full - w_one) / (MAX_BATCH - 1), 1e-7)
+    base = max(w_one - per_request, 1e-5)
+
+    def drain():
+        srv.submit(inserts=_update(rng, srv.executor.store, 16))
+        srv.flush()
+
+    applied0 = srv.stats.updates_applied
+    w_maint = _measure(drain, max(2, iters // 2))
+    n_applied = max(srv.stats.updates_applied - applied0, 1)
+    per_triple = max(w_maint * (max(2, iters // 2) + 1) / n_applied, 1e-7)
+    return FixedServiceModel(base, per_request, per_triple)
+
+
+def build_frontend(session, classes, model, window, admission="shed",
+                   priority_dispatch=True, queue_cap=QUEUE_CAP):
+    server = session.serve(maintenance=MaintenanceConfig(auto_retune=False))
+    return ServingFrontend(
+        server, classes,
+        FrontendConfig(queue_cap=queue_cap, batching_window=window,
+                       max_batch=MAX_BATCH, admission=admission,
+                       priority_dispatch=priority_dispatch),
+        clock=VirtualClock(), service_model=model)
+
+
+def _record(metrics, lines, tag, rep, slo_ms):
+    metrics[f"{tag}.shed_rate"] = round(rep.shed_rate, 4)
+    metrics[f"{tag}.throughput_rps"] = round(rep.throughput, 1)
+    metrics[f"{tag}.batch_occupancy"] = round(rep.batch_occupancy, 2)
+    metrics[f"{tag}.max_queue_depth"] = rep.max_queue_depth
+    for cname, cr in rep.per_class.items():
+        p = f"{tag}.{cname}"
+        metrics[f"{p}.p50_ms"] = round(cr.p50 * 1e3, 4)
+        metrics[f"{p}.p99_ms"] = round(cr.p99 * 1e3, 4)
+        metrics[f"{p}.mean_ms"] = round(cr.mean * 1e3, 4)
+        metrics[f"{p}.throughput_rps"] = round(cr.throughput, 1)
+        metrics[f"{p}.offered"] = cr.offered
+        metrics[f"{p}.shed"] = cr.shed
+        metrics[f"{p}.downgraded"] = cr.downgraded
+        metrics[f"{p}.slo_ms"] = (round(cr.slo * 1e3, 4)
+                                  if cr.slo is not None else "none")
+        metrics[f"{p}.slo_met"] = str(cr.slo_met)
+    g = rep.per_class["gold"]
+    lines.append(emit(
+        f"serve.{tag}", g.p99 * 1e6,
+        f"gold_p99/slo={g.p99 * 1e3:.2f}/{slo_ms:.2f}ms;"
+        f"shed={rep.shed_rate:.2f};thr={rep.throughput:.0f}rps"))
+
+
+def main(lines: list[str]) -> None:
+    quick = quick_mode()
+    rng = np.random.default_rng(0)
+    uni = generate(n_universities=1 if quick else 10, seed=0)
+    wl = lubm_workload(uni.dictionary)
+    session = TuningSession(uni.store, wl, schema=uni.schema,
+                            type_id=uni.type_id, cfg=_cfg())
+    session.retune()
+    session.apply()
+    names = [q.name for q in wl]
+
+    model = calibrate(session, names, rng, iters=3 if quick else 8)
+    # every timescale is service-relative so the regime is identical
+    # whatever the calibrated wall costs came out to: batching window =
+    # one full-batch service, update batches sized so one maintenance
+    # drain costs at most ~2 batch services, SLOs carry one maintenance
+    # allowance (an update can stall exactly one in-flight batch)
+    s_max = model.estimate(MAX_BATCH)
+    window = s_max
+    capacity = MAX_BATCH / s_max          # requests / virtual second
+    upd_size = max(1, min(8, int(2.0 * s_max / model.per_maint_triple)))
+    maint_cost = upd_size * model.per_maint_triple
+    gold_slo = window + 4.0 * s_max + maint_cost
+    std_slo = window + 16.0 * s_max + maint_cost
+    bulk_slo = 400.0 * s_max + maint_cost
+    class_specs = (
+        ClassSpec("gold", 0.2, tuple(names[0::3]), priority=2, slo=gold_slo),
+        ClassSpec("std", 0.3, tuple(names[1::3]), priority=1, slo=std_slo),
+        ClassSpec("bulk", 0.5, tuple(names[2::3] or names[:1]), priority=0,
+                  slo=bulk_slo),
+    )
+    classes = [QueryClass(c.name, priority=c.priority, slo=c.slo)
+               for c in class_specs]
+    duration = (150 if quick else 400) * s_max
+    update_rate = 4.0 / duration          # a few update batches per run
+
+    metrics: dict = {
+        "store_triples": len(session.executor.store), "queries": len(wl),
+        "quick": int(quick), "batch_base_us": round(model.batch_base * 1e6, 2),
+        "per_request_us": round(model.per_request * 1e6, 3),
+        "per_maint_triple_us": round(model.per_maint_triple * 1e6, 3),
+        "capacity_rps": round(capacity, 1), "max_batch": MAX_BATCH,
+        "queue_cap": QUEUE_CAP, "batching_window_ms": round(window * 1e3, 4),
+        "update_size": upd_size, "gold_slo_ms": round(gold_slo * 1e3, 4),
+    }
+
+    def traffic(scale):
+        return TrafficConfig(
+            rate=scale * capacity, duration=duration, classes=class_specs,
+            seed=42, update_rate=update_rate, update_size=upd_size)
+
+    def update_fn(urng):
+        return _update(urng, session.executor.store, upd_size), None
+
+    reports = {}
+    for tag, scale in LEVELS:
+        fe = build_frontend(session, classes, model, window)
+        reports[tag] = run_open_loop(fe, traffic(scale), update_fn=update_fn)
+        _record(metrics, lines, tag, reports[tag], gold_slo * 1e3)
+
+    # no-admission FIFO baseline at the overload level: same traffic,
+    # no SLO shedding, no priority dispatch, effectively unbounded queue
+    fe_base = build_frontend(session, classes, model, window,
+                             admission="none", priority_dispatch=False,
+                             queue_cap=1 << 16)
+    base = run_open_loop(fe_base, traffic(1.5), update_fn=update_fn)
+    _record(metrics, lines, "1.5x_noadm", base, gold_slo * 1e3)
+
+    # ---- acceptance assertions (the CI SLO gate) ---------------------
+    low, high = reports["0.5x"], reports["1.5x"]
+    assert low.shed_rate == 0.0, \
+        f"must not shed at 0.5x load (shed_rate={low.shed_rate})"
+    assert low.per_class["gold"].slo_met is True, (
+        f"gold p99 {low.per_class['gold'].p99 * 1e3:.2f}ms breaches its "
+        f"{gold_slo * 1e3:.2f}ms SLO at 0.5x load")
+    assert high.shed_rate > 0.0, "overload must shed under admission control"
+    assert high.per_class["gold"].slo_met is True, (
+        "admission control must hold the gold p99 SLO under 1.5x overload "
+        f"(p99={high.per_class['gold'].p99 * 1e3:.2f}ms)")
+    assert base.per_class["gold"].slo_met is False, (
+        "the no-admission baseline should breach the gold SLO under "
+        "overload — otherwise the offered load is not an overload")
+    write_bench_json("serve", metrics)
+
+
+if __name__ == "__main__":
+    main(["name,us_per_call,derived"])

@@ -7,6 +7,7 @@
   reformulation   §3 Workload Processor: union sizes + completeness gain
   maintenance     quality m-term: incremental vs recompute
   fault           degradation ladder: availability/recovery per fault class
+  serve           async frontend: per-class p50/p99 + SLO at 3 offered loads
   kernels         Pallas join probe vs jnp oracle (+TPU derived terms)
   lm_step         LM substrate smoke-step timings
 
@@ -24,7 +25,7 @@ def main() -> None:
     from benchmarks import (bench_compile_scale, bench_fault, bench_kernels,
                             bench_lm_step, bench_maintenance,
                             bench_query_eval, bench_reformulation,
-                            bench_retune, bench_search)
+                            bench_retune, bench_search, bench_serve)
 
     args = sys.argv[1:]
     if "--quick" in args:  # CI smoke: small datasets, few iterations
@@ -39,6 +40,7 @@ def main() -> None:
         "reformulation": bench_reformulation.main,
         "maintenance": bench_maintenance.main,
         "fault": bench_fault.main,
+        "serve": bench_serve.main,
         "kernels": bench_kernels.main,
         "lm_step": bench_lm_step.main,
     }

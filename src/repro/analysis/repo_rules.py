@@ -21,6 +21,16 @@ the source says, catching patterns that only bite later:
                            the failures the degradation ladder exists
                            to surface (opt-out: ``# lint: allow-swallow``
                            on the except line)
+  rules/unbounded-queue    in the serve package, container growth with
+                           no visible bound: a `deque()` without
+                           `maxlen`, or `.append/.appendleft/.extend`
+                           on persistent state (an attribute) whose
+                           module never trims it (`del x[...]`), slices
+                           it back, or length-guards it — a serving
+                           process runs indefinitely, so an unbounded
+                           queue is a slow memory leak and an unbounded
+                           latency backlog (opt-out:
+                           ``# lint: allow-unbounded``)
 
 Scope: the pipeline packages (`core`, `query`, `api`, `views`, `rdf`,
 `serve`, `kernels`, `checkpoint`, `analysis`, the top-level modules).
@@ -41,8 +51,12 @@ EXCLUDED_DIRS = frozenset(
      "tests", "__pycache__"})
 ALLOW_MARKER = "lint: allow-assert"
 SWALLOW_MARKER = "lint: allow-swallow"
+UNBOUNDED_MARKER = "lint: allow-unbounded"
 # packages where a silently-swallowed exception defeats fault tolerance
 SWALLOW_SCOPE = frozenset({"serve", "maintenance", "api"})
+# packages where an unbounded queue is a memory leak / latency backlog
+QUEUE_SCOPE = frozenset({"serve"})
+_GROW_METHODS = ("append", "appendleft", "extend")
 
 _MUTABLE_CALLS = ("list", "dict", "set", "bytearray")
 
@@ -142,6 +156,97 @@ def _swallows(handler: ast.ExceptHandler) -> bool:
     return True
 
 
+def _container_attr(node: ast.expr) -> str | None:
+    """Name of the persistent attribute a container expression lives on,
+    unwrapping subscripts: `self.log` -> "log", `self.produced[i]` ->
+    "produced", `self.stats.faults` -> "faults".  None for plain local
+    names (function-scoped lists are bounded by the call)."""
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def _is_deque_call(node: ast.Call) -> bool:
+    if isinstance(node.func, ast.Name):
+        return node.func.id == "deque"
+    if isinstance(node.func, ast.Attribute):
+        return node.func.attr == "deque"
+    return False
+
+
+def _bounded_attrs(tree: ast.AST) -> set[str]:
+    """Attributes the module visibly bounds: trimmed with `del x[...]`,
+    reassigned through a slice of themselves, or length-guarded with
+    `len(...)` anywhere (the guard is assumed to enforce a cap)."""
+    bounded: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Delete):
+            for t in node.targets:
+                if isinstance(t, ast.Subscript):
+                    attr = _container_attr(t)
+                    if attr:
+                        bounded.add(attr)
+        elif isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id == "len" and node.args:
+            attr = _container_attr(node.args[0])
+            if attr:
+                bounded.add(attr)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                attr = _container_attr(t) if isinstance(t, (ast.Subscript,
+                                                            ast.Attribute)) \
+                    else None
+                if not attr:
+                    continue
+                if isinstance(node.value, ast.Subscript) \
+                        and _container_attr(node.value) == attr:
+                    bounded.add(attr)  # x = x[-n:] style self-trim
+                if isinstance(node.value, ast.Call) \
+                        and _is_deque_call(node.value) \
+                        and any(kw.arg == "maxlen"
+                                for kw in node.value.keywords):
+                    bounded.add(attr)  # deque(maxlen=...) self-bounds
+    return bounded
+
+
+def _check_unbounded(tree: ast.AST, lines: list[str],
+                     path: str) -> list[Finding]:
+    out: list[Finding] = []
+    bounded = _bounded_attrs(tree)
+
+    def marked(lineno: int) -> bool:
+        line = lines[lineno - 1] if lineno <= len(lines) else ""
+        return UNBOUNDED_MARKER in line
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if _is_deque_call(node):
+            if not any(kw.arg == "maxlen" for kw in node.keywords) \
+                    and not marked(node.lineno):
+                out.append(_f(
+                    "rules/unbounded-queue",
+                    "deque without maxlen in serving code — give it a "
+                    "cap or opt out with `# lint: allow-unbounded`",
+                    f"{path}:{node.lineno}"))
+            continue
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in _GROW_METHODS:
+            attr = _container_attr(node.func.value)
+            if attr and attr not in bounded and not marked(node.lineno):
+                out.append(_f(
+                    "rules/unbounded-queue",
+                    f"`.{node.func.attr}` grows persistent container "
+                    f"{attr!r} with no visible bound in this module "
+                    "(no del-trim, slice-trim, or len() guard) — a "
+                    "serving process runs forever, so cap it or opt "
+                    "out with `# lint: allow-unbounded`",
+                    f"{path}:{node.lineno}"))
+    return out
+
+
 def check_source(source: str, path: str) -> list[Finding]:
     """Run every rule over one module's source."""
     try:
@@ -151,7 +256,10 @@ def check_source(source: str, path: str) -> list[Finding]:
                    f"{path}:{e.lineno or 0}")]
     lines = source.splitlines()
     out: list[Finding] = []
-    swallow_scope = path.replace(os.sep, "/").split("/")[0] in SWALLOW_SCOPE
+    top_pkg = path.replace(os.sep, "/").split("/")[0]
+    swallow_scope = top_pkg in SWALLOW_SCOPE
+    if top_pkg in QUEUE_SCOPE:
+        out.extend(_check_unbounded(tree, lines, path))
 
     functions: dict[str, ast.FunctionDef | ast.AsyncFunctionDef] = {}
     for node in ast.walk(tree):

@@ -12,6 +12,10 @@ from repro.core.quality import MaintenanceCostModel, QualityWeights
 from repro.core.search import SearchConfig
 from repro.core.wizard import WizardConfig
 from repro.maintenance import Delta, MaintenanceConfig
+# async serving frontend config surface (pure-python, no jax import)
+from repro.serve.frontend import (FrontendConfig, QueryClass,  # noqa: F401
+                                  ServingFrontend)
+from repro.serve.loadgen import ClassSpec, TrafficConfig  # noqa: F401
 
 from repro.api.session import (ApplyReport, RetuneReport,  # noqa: F401
                                TuningSession)
@@ -26,4 +30,9 @@ __all__ = [
     "MaintenanceCostModel",
     "MaintenanceConfig",
     "Delta",
+    "FrontendConfig",
+    "QueryClass",
+    "ServingFrontend",
+    "ClassSpec",
+    "TrafficConfig",
 ]

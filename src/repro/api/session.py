@@ -357,6 +357,47 @@ class TuningSession:
                            maintenance=maintenance, chaos=chaos,
                            policy=policy)
 
+    def serve_async(self, classes=None, frontend=None, maintenance=None,
+                    chaos=None, policy=None, sharded=False, mesh=None,
+                    clock=None, service_model=None):
+        """Async serving frontend over this session's tuned workload:
+        bounded request queue, micro-batching window, per-class latency
+        SLOs with admission control — the `repro.serve.frontend`
+        subsystem, wired to a server bound to this session.
+
+        `classes`: iterable of `repro.serve.frontend.QueryClass` (default
+        one best-effort class).  `frontend`: a `FrontendConfig` with the
+        queue/window/admission knobs.  `clock`/`service_model` inject the
+        virtual clock and batch service model (tests pin both for
+        determinism).
+
+        `sharded=True` serves through a `repro.serve.sharded.
+        ShardedBackend` over `mesh` (default: all local devices) instead
+        of the single-device `QueryServer`: per-shard health, quorum
+        rollup, host fallback for degraded shards.  The sharded backend
+        is static-store, so it cannot be combined with `maintenance=`.
+        """
+        from repro.serve.frontend import (FrontendConfig, QueryClass,
+                                          ServingFrontend)
+
+        if classes is None:
+            classes = [QueryClass("default")]
+        if sharded:
+            if maintenance is not None:
+                raise ValueError(
+                    "sharded serving is static-store: maintenance= is "
+                    "only supported with sharded=False")
+            from repro.serve.sharded import ShardedBackend
+
+            server = ShardedBackend(self._ensure_applied(), mesh=mesh,
+                                    policy=policy)
+        else:
+            server = self.serve(maintenance=maintenance, chaos=chaos,
+                                policy=policy)
+        return ServingFrontend(server, classes,
+                               cfg=frontend or FrontendConfig(),
+                               clock=clock, service_model=service_model)
+
     # ------------------------------------------------------------------
     # streaming ingestion (serverless path)
     # ------------------------------------------------------------------

@@ -40,6 +40,21 @@ DEGRADED = "DEGRADED"
 STALE_ONLY = "STALE_ONLY"
 DOWN = "DOWN"
 
+# severity order for rollups over shard health maps
+_SEVERITY = {HEALTHY: 0, DEGRADED: 1, STALE_ONLY: 2, DOWN: 3}
+
+
+def _tier_health(tier: int | None, stale: bool, degraded: bool = False) -> str:
+    """Map one served ladder tier onto a health state (shared by the
+    whole-server `observe` and the per-shard `observe_shard`)."""
+    if tier is None:
+        return DOWN
+    if tier >= 3:
+        return STALE_ONLY
+    if tier > 0 or stale or degraded:
+        return DEGRADED
+    return HEALTHY
+
 
 @dataclass(frozen=True)
 class RetryPolicy:
@@ -146,6 +161,11 @@ class ServingSupervisor:
         self.health = HEALTHY
         self.batches = 0
         self.transitions: list[HealthTransition] = []
+        # shard-indexed health map (sharded serving backends): shard id
+        # -> HEALTHY/DEGRADED/STALE_ONLY/DOWN, folded into the overall
+        # health via `rollup()` so one bad shard degrades the server
+        # instead of taking it DOWN.
+        self.shard_health: dict[int, str] = {}
 
     def begin_batch(self) -> int:
         self.batches += 1
@@ -157,16 +177,63 @@ class ServingSupervisor:
         means the batch could not be served at all; `degraded=True`
         forces at least DEGRADED even for a tier-0 batch (e.g. one that
         only served after an integrity repair)."""
-        if tier is None:
-            to = DOWN
-        elif tier >= 3:
-            to = STALE_ONLY
-        elif tier > 0 or stale or degraded:
-            to = DEGRADED
-        else:
-            to = HEALTHY
+        to = _tier_health(tier, stale, degraded)
         self._set(to, reason or f"served by tier {tier}"
                   + (" (stale)" if stale else ""))
+        return self.health
+
+    # ------------------------------------------------------------------
+    # per-shard health (sharded serving)
+    # ------------------------------------------------------------------
+    def observe_shard(self, shard: int, tier: int | None,
+                      stale: bool = False) -> str:
+        """Record which ladder tier served shard `shard`'s partition
+        this batch — the same tier vocabulary as `observe` (0 device
+        program, 1-2 exact fallback, 3 stale cache, None unservable) —
+        without touching the overall health; call `rollup()` once per
+        batch to fold the map in."""
+        h = _tier_health(tier, stale)
+        self.shard_health[shard] = h
+        return h
+
+    def worst(self) -> str:
+        """Worst health across the shard map (HEALTHY when untracked)."""
+        if not self.shard_health:
+            return HEALTHY
+        return max(self.shard_health.values(), key=_SEVERITY.__getitem__)
+
+    def quorum(self, minimum: int | None = None) -> bool:
+        """True while at least `minimum` shards (default: a strict
+        majority) can serve EXACT answers for their partition (HEALTHY
+        or DEGRADED — a degraded shard serves via host fallback but its
+        answers are still exact)."""
+        if not self.shard_health:
+            return True
+        need = (len(self.shard_health) // 2 + 1
+                if minimum is None else minimum)
+        exact = sum(1 for h in self.shard_health.values()
+                    if _SEVERITY[h] <= _SEVERITY[DEGRADED])
+        return exact >= need
+
+    def rollup(self, stale: bool = False, reason: str = "") -> str:
+        """Fold the shard health map into the overall state: all shards
+        HEALTHY -> HEALTHY; any shard below HEALTHY while a quorum still
+        serves exact answers -> DEGRADED (the server keeps answering
+        from the remaining shards plus host fallback for the missing
+        partitions — one bad shard must not read as whole-server DOWN);
+        quorum lost but some shard still servable -> STALE_ONLY; every
+        shard unservable -> DOWN."""
+        w = self.worst()
+        if w == HEALTHY and not stale:
+            to = HEALTHY
+        elif self.quorum():
+            to = DEGRADED
+        elif any(_SEVERITY[h] < _SEVERITY[DOWN]
+                 for h in self.shard_health.values()):
+            to = STALE_ONLY
+        else:
+            to = DOWN
+        self._set(to, reason or f"shard rollup (worst={w})")
         return self.health
 
     def _set(self, to: str, reason: str) -> None:

@@ -230,17 +230,30 @@ def build_distributed_executor(plan: Plan, stats, view_infos, mesh,
 # ----------------------------------------------------------------------
 # host helpers
 # ----------------------------------------------------------------------
-def shard_store_by_subject(store, mesh, axis: str = "data"):
+def shard_store_by_subject(store, mesh, axis: str = "data",
+                           with_shards: bool = False):
     """Partition the TT by hash(subject); per-shard local sorted indexes,
-    stacked into global arrays sharded over `axis`."""
+    stacked into global arrays sharded over `axis`.
+
+    Empty shards are legal (hash skew, or ndev > distinct subjects —
+    common on tiny stores over wide meshes): they stack as all-sentinel
+    slabs, which every index order sorts last and `scan_pattern` masks,
+    so downstream searchsorted sees a valid zero-row sorted index.  The
+    per-shard capacity always covers the longest shard even past the
+    planner's power-of-two ceiling, so a heavily skewed shard can never
+    truncate rows.  `with_shards=True` additionally returns the host-
+    side per-shard `TripleStore`s (the mirrors a sharded serving backend
+    probes against and falls back to when a device shard degrades).
+    """
     ndev = mesh.shape[axis]
     t = store.triples
     dest = t[:, 0] % ndev
     from repro.rdf.triples import TripleStore
 
     shards = [TripleStore(t[dest == d]) for d in range(ndev)]
-    cap = max(max(len(s) for s in shards), 1)
-    cap = cost_mod.capacity_for(cap, safety=1.0)
+    longest = max((len(s) for s in shards), default=0)
+    cap = max(cost_mod.capacity_for(max(longest, 1), safety=1.0),
+              max(longest, 1))
 
     out: dict[str, np.ndarray] = {}
     for name in E.INDEX_NAMES:
@@ -250,14 +263,24 @@ def shard_store_by_subject(store, mesh, axis: str = "data"):
             stacked[d, : len(idx)] = idx
         out[name] = stacked.reshape(ndev * cap, 3)
     sharding = NamedSharding(mesh, P(axis))
-    return {k: jax.device_put(v, sharding) for k, v in out.items()}
+    tt = {k: jax.device_put(v, sharding) for k, v in out.items()}
+    return (tt, shards) if with_shards else tt
 
 
 def shard_prel_rows(rows: np.ndarray, key_col: int, mesh, axis: str = "data",
-                    cap_per_dev: int | None = None) -> PRel:
-    """Hash-partition extent rows by `key_col` into a sharded PRel."""
+                    cap_per_dev: int | None = None,
+                    width: int | None = None) -> PRel:
+    """Hash-partition extent rows by `key_col` into a sharded PRel.
+
+    A zero-row extent is valid input, including the degenerate 1-D empty
+    array numpy produces for `[]` — it is normalized to a (0, width)
+    table (`width` defaults to `key_col + 1`) so every shard gets an
+    empty-but-well-shaped slab instead of crashing on the column index.
+    """
     ndev = mesh.shape[axis]
     rows = np.asarray(rows, np.int32)
+    if rows.ndim != 2:
+        rows = rows.reshape(0, width if width else key_col + 1)
     dest = rows[:, key_col] % ndev
     groups = [rows[dest == d] for d in range(ndev)]
     cap = cap_per_dev or cost_mod.capacity_for(

@@ -81,6 +81,8 @@ class FaultInjector:
     below `serve/` only needs `.fire(site)`, so the query and
     maintenance layers never import this module."""
 
+    MAX_LOG = 4096  # injection log cap: chaos soaks run for many batches
+
     specs: dict[str, FaultSpec] = field(default_factory=dict)
     calls: dict[str, int] = field(default_factory=dict)   # per-site, lifetime
     injected: int = 0
@@ -120,6 +122,7 @@ class FaultInjector:
         spec.fired += 1
         self.injected += 1
         self.log.append((site, self.calls[site]))
+        del self.log[:-self.MAX_LOG]
         if spec.count is not None and spec.fired >= spec.count:
             self.specs.pop(site, None)
         if spec.kind == "timeout":
@@ -151,4 +154,5 @@ class FaultInjector:
         executor.extents[vid] = R.Relation(rows, rel.cols)
         self.injected += 1
         self.log.append(("extent_corrupt", vid))
+        del self.log[:-self.MAX_LOG]
         return vid

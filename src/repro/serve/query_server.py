@@ -105,11 +105,16 @@ class ServeStats:
     last_batch: dict = field(default_factory=lambda: {
         "tier": 0, "degraded": False, "stale": False})
     faults: list = field(default_factory=list)   # bounded fault log
+    # async frontend summary (repro.serve.frontend): queue depth, batch
+    # occupancy, shed/downgrade counters, per-class latency histograms —
+    # mirrored in by ServingFrontend._sync after each completed batch
+    frontend: dict = field(default_factory=dict)
 
     def as_dict(self) -> dict:
         d = dict(self.__dict__)
         d["last_batch"] = dict(self.last_batch)
         d["faults"] = list(self.faults)
+        d["frontend"] = dict(self.frontend)
         return d
 
 
@@ -466,7 +471,7 @@ class QueryServer:
     def readiness(self) -> dict:
         """Readiness probe: can this server answer SOMETHING (possibly
         stale)?  Ready in every health state but DOWN."""
-        return {
+        probe = {
             "ready": self.supervisor.ready(),
             "health": self.supervisor.health,
             "breaker": self.supervisor.fused.state,
@@ -475,6 +480,13 @@ class QueryServer:
             "lkg_queries": len(self._lkg),
             "batches": self.supervisor.batches,
         }
+        if self.stats.frontend:
+            # async frontend attached: surface its queue/shed state too
+            probe["frontend"] = {
+                k: self.stats.frontend.get(k)
+                for k in ("queue_depth", "shed", "downgraded",
+                          "batch_occupancy")}
+        return probe
 
     # ------------------------------------------------------------------
     def invalidate(self, store=None) -> None:

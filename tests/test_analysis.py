@@ -284,6 +284,48 @@ def test_rules_catch_swallowed_exception():
     assert check_source(optout, "serve/m.py") == []
 
 
+def test_rules_catch_unbounded_queue():
+    grow = (
+        "from collections import deque\n"
+        "class S:\n"
+        "    def __init__(self):\n"
+        "        self.q = deque()\n"
+        "        self.log = []\n"
+        "    def push(self, x):\n"
+        "        self.q.append(x)\n"
+        "        self.log.append(x)\n"
+    )
+    # a capless deque + two unbounded persistent appends, serve/ only
+    fs = check_source(grow, "serve/m.py")
+    assert _rules(fs) == {"rules/unbounded-queue"} and len(fs) == 3
+    assert check_source(grow, "query/m.py") == []
+    # every bounding idiom passes: deque(maxlen=), len() guard,
+    # del-trim, slice self-trim, the opt-out marker, and local lists
+    ok = (
+        "from collections import deque\n"
+        "class S:\n"
+        "    MAX = 8\n"
+        "    def __init__(self):\n"
+        "        self.q = deque(maxlen=8)\n"
+        "        self.guarded = []\n"
+        "        self.trimmed = []\n"
+        "        self.sliced = []\n"
+        "        self.marked = []\n"
+        "    def push(self, x):\n"
+        "        self.q.append(x)\n"
+        "        if len(self.guarded) < self.MAX:\n"
+        "            self.guarded.append(x)\n"
+        "        self.trimmed.append(x)\n"
+        "        del self.trimmed[:-self.MAX]\n"
+        "        self.sliced.append(x)\n"
+        "        self.sliced = self.sliced[-self.MAX:]\n"
+        "        self.marked.append(x)  # lint: allow-unbounded\n"
+        "        local = []\n"
+        "        local.append(x)\n"
+    )
+    assert check_source(ok, "serve/m.py") == []
+
+
 def test_repo_rules_clean_on_library():
     report = analyze_repo()
     assert report.clean(), report.format()
